@@ -1,0 +1,114 @@
+"""Paper §4.4.2 ablations (Fig. 6a) and group-size sensitivity (Fig. 6b),
+at the scheduling level (the learning-level counterparts run in
+bench_logic_rl):
+
+* no grouped rollout  -> trained data biases short (starvation)
+* post-hoc sort       -> same data as baseline but sorted batches; the
+  off-policiness (staleness) stays baseline-high
+* group size n sweep  -> n=1 ~ baseline-ish mix, n=4 paper setting,
+  n=8/16 increasingly clustered (degenerate at the extreme)
+"""
+from __future__ import annotations
+
+import statistics
+from typing import List
+
+from benchmarks.bench_throughput import make_prompts, paper_length_sampler
+from repro.core.buffer import Mode, StatefulRolloutBuffer
+from repro.core.controller import (CanonicalController, SortedRLConfig,
+                                   SortedRLController, UngroupedController)
+from repro.rollout.sim import SimEngine
+
+
+def _collect(ctl_kind: str, group=4, n_updates=8, cap=64, max_gen=4096,
+             seed=2):
+    sampler = paper_length_sampler(median=800, max_len=max_gen)
+    eng = SimEngine(capacity=cap, max_gen_len=max_gen, seed=seed,
+                    length_sampler=sampler)
+    mode = Mode.PARTIAL if ctl_kind != "baseline" else Mode.ON_POLICY
+    buf = StatefulRolloutBuffer(mode)
+    cfg = SortedRLConfig(mode=mode, rollout_batch=cap, group_size=group,
+                         update_batch=cap, max_gen_len=max_gen)
+    lens, stale = [], []
+
+    def train_fn(entries, version):
+        lens.append([e.gen_len for e in entries])
+        stale.append(statistics.mean(
+            e.staleness(version) for e in entries))
+
+    if ctl_kind == "sorted":
+        ctl = SortedRLController(eng, buf, cfg, train_fn)
+        while len(lens) < n_updates:
+            ctl.run_group(make_prompts(cap * group, seed + len(lens)))
+    elif ctl_kind == "ungrouped":
+        stream = iter([(p, None) for p in make_prompts(100_000, seed)])
+        ctl = UngroupedController(eng, buf, cfg, train_fn,
+                                  prompt_stream=stream)
+        ctl.run_steps(n_updates=n_updates)
+    else:  # baseline / posthoc: paper setting — rollout batch is
+        # group*cap prompts, update batch cap -> `group` off-policy updates
+        ctl = CanonicalController(eng, buf, cfg, train_fn,
+                                  sort_post_hoc=(ctl_kind == "posthoc"))
+        while len(lens) < n_updates:
+            ctl.run_group(make_prompts(cap * group, seed + len(lens)))
+    flat = [x for b in lens[:n_updates] for x in b]
+    intra = statistics.mean(statistics.pstdev(b) for b in lens[:n_updates]
+                            if len(b) > 1)
+    return {
+        "mean_len": statistics.mean(flat),
+        "intra_batch_std": intra,
+        "mean_staleness": statistics.mean(stale[:n_updates]),
+        "bubble": ctl.metrics.bubble_ratio,
+    }
+
+
+def fill_policy_rows() -> List[str]:
+    """Beyond-paper: slot-fill policy study (which pending entry gets a
+    freed slot).  resume_first = paper-spirit default (bounded staleness);
+    fresh_first finishes harvests faster (lower bubble) at higher
+    staleness — a second bubble/staleness knob besides group size."""
+    from benchmarks.bench_throughput import (make_prompts,
+                                             paper_length_sampler)
+    from repro.core.controller import SortedRLController as Ctl
+    out = []
+    for policy in ("resume_first", "fresh_first"):
+        eng = SimEngine(capacity=128, max_gen_len=8192, seed=1,
+                        length_sampler=paper_length_sampler())
+        buf = StatefulRolloutBuffer(Mode.PARTIAL)
+        cfg = SortedRLConfig(mode=Mode.PARTIAL, rollout_batch=128,
+                             group_size=4, update_batch=128,
+                             max_gen_len=8192)
+        stale = []
+        ctl = Ctl(eng, buf, cfg,
+                  lambda e, v: stale.extend(x.staleness(v) for x in e),
+                  fill_policy=policy)
+        ctl.run_group(make_prompts(512, 1))
+        m = ctl.metrics
+        out.append(f"fill_policy/{policy},{m.elapsed*1e6:.0f},"
+                   f"bubble={m.bubble_ratio:.4f} "
+                   f"tput={m.throughput:.0f} "
+                   f"staleness={sum(stale)/len(stale):.3f}")
+    return out
+
+
+def main() -> List[str]:
+    lines = []
+    for kind in ("baseline", "posthoc", "sorted", "ungrouped"):
+        r = _collect(kind)
+        lines.append(f"fig6a_ablation/{kind},0,mean_len={r['mean_len']:.0f} "
+                     f"intra_std={r['intra_batch_std']:.0f} "
+                     f"staleness={r['mean_staleness']:.2f} "
+                     f"bubble={r['bubble']:.3f}")
+    for n in (1, 2, 4, 8, 16):
+        r = _collect("sorted", group=n)
+        lines.append(f"fig6b_group_size/n{n},0,mean_len={r['mean_len']:.0f} "
+                     f"intra_std={r['intra_batch_std']:.0f} "
+                     f"staleness={r['mean_staleness']:.2f} "
+                     f"bubble={r['bubble']:.3f}")
+    lines.extend(fill_policy_rows())
+    return lines
+
+
+if __name__ == "__main__":
+    for l in main():
+        print(l)

@@ -1,0 +1,59 @@
+"""Paper Fig. 1a reproduction: latency breakdown of RL training (rollout vs
+inference/update share) as the generation budget grows, from the simulator
+cost model plus a measured update-cost estimate.
+
+Fig. 1b/1c: GPU wall time per rollout batch and the rollout length
+distribution (printed as quantiles of the sampler used throughout).
+"""
+from __future__ import annotations
+
+import math
+import random
+from typing import List
+
+from benchmarks.bench_throughput import make_prompts, paper_length_sampler
+from repro.core.buffer import Mode, StatefulRolloutBuffer
+from repro.core.controller import CanonicalController, SortedRLConfig
+from repro.rollout.sim import SimCostModel, SimEngine
+
+
+def rollout_time(max_gen: int, n=128, seed=0) -> float:
+    sampler = paper_length_sampler(max_len=max_gen)
+    eng = SimEngine(capacity=n, max_gen_len=max_gen, seed=seed,
+                    length_sampler=sampler)
+    buf = StatefulRolloutBuffer(Mode.ON_POLICY)
+    cfg = SortedRLConfig(rollout_batch=n, group_size=1, update_batch=n,
+                         max_gen_len=max_gen)
+    ctl = CanonicalController(eng, buf, cfg, lambda e, v: None)
+    ctl.run_group(make_prompts(n, seed))
+    return ctl.metrics.elapsed, ctl.metrics.tokens_generated
+
+
+def main() -> List[str]:
+    lines = []
+    # update cost model: ~3x the FLOPs of one forward over the same tokens,
+    # compute-bound; derive from the v5e roofline constants.
+    from repro.launch.mesh import PEAK_FLOPS_BF16
+    for max_gen in (1024, 4096, 8192, 16384):
+        t_roll, toks = rollout_time(max_gen)
+        # update: 6*N*D flops on the generated tokens for an 8B model on
+        # 8 chips at 40% MFU (the paper's Fig. 1a setting, scaled)
+        n_params = 8e9
+        t_update = 6 * n_params * toks / (8 * PEAK_FLOPS_BF16 * 0.4)
+        frac = t_roll / (t_roll + t_update)
+        lines.append(f"fig1a_breakdown/gen{max_gen},{t_roll*1e6:.0f},"
+                     f"rollout_frac={frac:.3f} update_s={t_update:.1f}")
+    # Fig 1c: length distribution quantiles
+    rng = random.Random(0)
+    sampler = paper_length_sampler(max_len=8192)
+    xs = sorted(sampler(rng) for _ in range(512))
+    q = lambda p: xs[int(p * 511)]
+    capped = sum(x >= 8192 for x in xs) / len(xs)
+    lines.append(f"fig1c_lengths/quantiles,0,p50={q(.5)} p80={q(.8)} "
+                 f"p95={q(.95)} capped_frac={capped:.3f}")
+    return lines
+
+
+if __name__ == "__main__":
+    for l in main():
+        print(l)

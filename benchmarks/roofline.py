@@ -1,0 +1,86 @@
+"""§Roofline: formats the per-(arch x shape x mesh) roofline table from
+dryrun_results.json (produced by ``python -m repro.launch.dryrun --all
+--both-meshes --out dryrun_results.json``) and identifies the hillclimb
+candidates: worst roofline fraction, most collective-bound, and the pair
+most representative of the paper's technique (the decode shape of the
+largest rollout model).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+
+def load(path: str = "dryrun_results.json") -> List[Dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(results: List[Dict], mesh: str = "16x16") -> List[str]:
+    lines = ["arch,shape,mesh,dominant,compute_ms,memory_ms,collective_ms,"
+             "useful_ratio,peak_hbm_gb,plan"]
+    for r in results:
+        if r.get("skipped"):
+            lines.append(f"{r['arch']},{r['shape']},-,SKIPPED({r['reason']})"
+                         ",,,,,,")
+            continue
+        if r.get("error"):
+            lines.append(f"{r['arch']},{r['shape']},?,ERROR({r['error'][:60]})"
+                         ",,,,,,")
+            continue
+        if r["mesh"] != mesh:
+            continue
+        ro = r["roofline"]
+        plan = r["plan"]
+        pl = f"{plan['strategy']}{'+fsdp' if plan['fsdp'] else ''}" \
+             f"{'+sp' if plan['seq_parallel'] else ''}" \
+             f"{'+remat' if plan['remat'] else ''}" \
+             f"x{plan['microbatches']}"
+        lines.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},{ro['dominant']},"
+            f"{ro['compute_s']*1e3:.1f},{ro['memory_s']*1e3:.1f},"
+            f"{ro['collective_s']*1e3:.1f},{ro['useful_flops_ratio']:.3f},"
+            f"{r['per_device']['peak_hbm_gb']},{pl}")
+    return lines
+
+
+def pick_hillclimbs(results: List[Dict]) -> Dict[str, Dict]:
+    ok = [r for r in results
+          if not r.get("skipped") and not r.get("error")
+          and r.get("mesh") == "16x16"]
+
+    def frac(r):
+        ro = r["roofline"]
+        total = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        ideal = ro["model_flops_per_dev"] / 197e12
+        return ideal / total if total else 0.0
+
+    worst = min(ok, key=frac)
+    coll = max(ok, key=lambda r: r["roofline"]["collective_s"]
+               / max(r["roofline"]["compute_s"]
+                     + r["roofline"]["memory_s"], 1e-12))
+    # paper-representative: decode of the biggest rollout model
+    decs = [r for r in ok if r["shape"] == "decode_32k"]
+    rep = max(decs, key=lambda r: r["params_total"]) if decs else worst
+    return {"worst_roofline_fraction": worst, "most_collective_bound": coll,
+            "paper_representative_decode": rep}
+
+
+def main() -> List[str]:
+    try:
+        results = load()
+    except FileNotFoundError:
+        return ["roofline/missing,0,run dryrun first"]
+    lines = []
+    for row in table(results):
+        lines.append("roofline_table," + row)
+    picks = pick_hillclimbs(results)
+    for k, r in picks.items():
+        lines.append(f"roofline_pick/{k},0,{r['arch']}x{r['shape']}")
+    return lines
+
+
+if __name__ == "__main__":
+    for l in main():
+        print(l)

@@ -1,0 +1,40 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  fig1a_breakdown/*   latency breakdown (rollout dominance, Fig. 1a/1c)
+  fig5_throughput/*   throughput + bubble ratio per strategy (Fig. 5, Eq. 4)
+  fig6a_ablation/*    grouped-rollout / post-hoc-sort ablations (Fig. 6a)
+  fig6b_group_size/*  group-size sensitivity (Fig. 6b)
+  fig3_logic_rl/*     real RL token-efficiency on K&K (Fig. 3, quick mode)
+  roofline_table/*    per (arch x shape) roofline terms (§Roofline)
+
+Full-scale variants: bench_logic_rl --full, repro.launch.dryrun --all.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_ablation, bench_breakdown, bench_logic_rl,
+                            bench_throughput, roofline)
+    rows = []
+    for mod, fn in (("breakdown", bench_breakdown.main),
+                    ("throughput", bench_throughput.main),
+                    ("ablation", bench_ablation.main),
+                    ("roofline", roofline.main)):
+        t0 = time.time()
+        rows.extend(fn())
+        print(f"# {mod} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if "--skip-rl" not in sys.argv:
+        t0 = time.time()
+        rows.extend(bench_logic_rl.main(quick=True))
+        print(f"# logic_rl done in {time.time()-t0:.1f}s", file=sys.stderr)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

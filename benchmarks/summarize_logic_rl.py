@@ -1,0 +1,32 @@
+"""Summarise logic_rl_results.json (multi-seed Fig. 3 reproduction) into
+the EXPERIMENTS.md table."""
+import json
+import statistics
+import sys
+
+
+def main(path="logic_rl_results.json"):
+    with open(path) as f:
+        runs = json.load(f)
+    # runs: {seed: {strategy: out}} or a single {strategy: out}
+    if "on_policy" not in next(iter(runs.values())):
+        runs = {"0": runs}
+    strategies = ["on_policy", "partial", "baseline"]
+    rows = []
+    for st in strategies:
+        rewards, solves, bubbles = [], [], []
+        for seed, by_st in runs.items():
+            out = by_st[st]
+            rewards.append(out["final_eval"]["reward_mean"])
+            solves.append(out["final_eval"]["solve_rate"])
+            bubbles.append(out["rollout_metrics"]["bubble_ratio"])
+        rows.append((st, statistics.mean(rewards),
+                     (statistics.stdev(rewards) if len(rewards) > 1 else 0),
+                     statistics.mean(solves), statistics.mean(bubbles)))
+    print("strategy,reward_mean,reward_std,solve_rate,bubble")
+    for r in rows:
+        print(f"{r[0]},{r[1]:.3f},{r[2]:.3f},{r[3]:.3f},{r[4]:.4f}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

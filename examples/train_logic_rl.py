@@ -1,0 +1,45 @@
+"""End-to-end RL training driver (paper §4.2 at CPU scale): SFT warm-up,
+then Reinforce++ with the chosen scheduling strategy on Knights & Knaves.
+
+  PYTHONPATH=src python examples/train_logic_rl.py --strategy sorted \
+      --mode on_policy --groups 4
+"""
+import argparse
+import json
+
+from repro.core.buffer import Mode
+from repro.train.loop import RLExperimentConfig, run_logic_rl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--strategy", default="sorted",
+                    choices=["sorted", "baseline", "posthoc_sort"])
+    ap.add_argument("--mode", default="on_policy",
+                    choices=["on_policy", "partial"])
+    ap.add_argument("--groups", type=int, default=4)
+    ap.add_argument("--rollout-batch", type=int, default=32)
+    ap.add_argument("--update-batch", type=int, default=32)
+    ap.add_argument("--group-size", type=int, default=2)
+    ap.add_argument("--sft-steps", type=int, default=150)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cfg = RLExperimentConfig(
+        strategy=args.strategy, mode=Mode(args.mode),
+        rollout_batch=args.rollout_batch, update_batch=args.update_batch,
+        group_size=args.group_size, n_groups=args.groups,
+        sft_steps=args.sft_steps, seed=args.seed)
+    out = run_logic_rl(cfg)
+    print("final eval:", out["final_eval"])
+    print("rollout:", out["rollout_metrics"])
+    for ev in out["evals"]:
+        print("  eval", ev)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,236 @@
+"""Configuration system: model configs, input-shape configs, registry.
+
+Every assigned architecture gets a ``repro/configs/<id>.py`` that builds a
+:class:`ModelConfig` with the exact public-literature spec (cited in the
+module docstring).  ``registry()`` maps arch-id -> config; the launcher and
+tests select via ``--arch <id>``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    experts_per_token: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 1e-2
+    router_z_weight: float = 1e-3
+    # Shared (dense) expert path, used by some MoE families; 0 disables.
+    d_ff_shared: int = 0
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 64          # N: SSM state size per head
+    head_dim: int = 64           # P: channels per SSM head
+    num_heads: int = 0           # derived from d_inner / head_dim if 0
+    expand: int = 2              # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk_size: int = 256        # SSD chunk length (TPU-friendly)
+    ngroups: int = 1             # B/C groups (like GQA for SSM)
+
+
+@dataclass(frozen=True)
+class AttnConfig:
+    qk_norm: bool = False        # qwen3: RMSNorm on per-head q/k
+    qkv_bias: bool = False       # qwen1.5
+    attn_softcap: float = 0.0    # gemma2 attention-logit soft capping
+    sliding_window: int = 0      # window for "local" layers (gemma2)
+    # layer pattern: 'global' | 'local_global' (alternating, local first)
+    layer_pattern: str = "global"
+    rope_theta: float = 10_000.0
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | hybrid | ssm | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0            # 0 -> d_model // num_heads
+    attn: AttnConfig = field(default_factory=AttnConfig)
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    mlp_act: str = "silu"        # silu (gated) | relu2 (squared relu) | gelu
+    gated_mlp: bool = True
+    norm_type: str = "rmsnorm"   # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    pos_embedding: str = "rope"  # rope | learned | sinusoidal | none
+    tie_embeddings: bool = False
+    scale_embeddings: bool = False  # gemma2: embeds *= sqrt(d_model)
+    logit_softcap: float = 0.0   # gemma2 final-logit soft capping
+    max_position: int = 1 << 20
+    # hybrid (zamba2): apply a shared attention block every k SSM layers
+    attn_every: int = 0
+    # vlm / audio frontends are stubs: the model consumes precomputed
+    # embeddings of this many positions (0 = no frontend)
+    num_stub_positions: int = 0
+    stub_kind: str = "none"      # none | vision_patches | audio_frames
+    # enc-dec (whisper): encoder layer count (decoder uses num_layers)
+    encoder_layers: int = 0
+    encoder_positions: int = 0
+    # activation checkpointing: recompute layer internals in backward
+    remat: bool = False
+    # numerics
+    param_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+    # sub-quadratic decode support (drives long_500k applicability)
+    supports_long_decode: bool = False
+    source: str = ""             # citation
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.num_heads
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Analytic total parameter count (for 6ND roofline terms)."""
+        return _param_count(self)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k experts only)."""
+        return _param_count(self, active_only=True)
+
+
+def _dense_block_params(cfg: ModelConfig, d_ff: int) -> int:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    attn = d * hd * (cfg.num_heads + 2 * cfg.num_kv_heads)  # qkv
+    attn += cfg.num_heads * hd * d                          # out proj
+    if cfg.attn.qkv_bias:
+        attn += hd * (cfg.num_heads + 2 * cfg.num_kv_heads)
+    mlp = d * d_ff * (3 if cfg.gated_mlp else 2)
+    norms = 2 * d
+    return attn + mlp + norms
+
+
+def _ssm_block_params(cfg: ModelConfig) -> int:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    nheads = s.num_heads or d_inner // s.head_dim
+    in_proj = d * (2 * d_inner + 2 * s.ngroups * s.state_dim + nheads)
+    conv = (d_inner + 2 * s.ngroups * s.state_dim) * s.conv_width
+    out = d_inner * d
+    extras = 2 * nheads + d_inner + d  # A_log, dt_bias, norm, layer norm
+    return in_proj + conv + out + extras
+
+
+def _param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    n = cfg.vocab_size * cfg.d_model  # embedding
+    if not cfg.tie_embeddings:
+        n += cfg.vocab_size * cfg.d_model
+    n += cfg.d_model  # final norm
+    if cfg.family in ("dense", "vlm"):
+        n += cfg.num_layers * _dense_block_params(cfg, cfg.d_ff)
+    elif cfg.family == "moe":
+        m = cfg.moe
+        per = _dense_block_params(cfg, 0)  # attn + norms only
+        router = cfg.d_model * m.num_experts
+        e = m.experts_per_token if active_only else m.num_experts
+        expert = e * cfg.d_model * m.d_ff_expert * 3
+        shared = cfg.d_model * m.d_ff_shared * 3 if m.d_ff_shared else 0
+        n += cfg.num_layers * (per + router + expert + shared)
+    elif cfg.family == "hybrid":
+        n += cfg.num_layers * _ssm_block_params(cfg)
+        n_attn = max(1, cfg.num_layers // max(cfg.attn_every, 1))
+        n += n_attn and _dense_block_params(cfg, cfg.d_ff)  # shared block
+    elif cfg.family == "ssm":
+        # xlstm: alternating sLSTM / mLSTM; rough analytic count
+        d = cfg.d_model
+        n += cfg.num_layers * (8 * d * d)
+    elif cfg.family == "audio":
+        n += cfg.num_layers * (_dense_block_params(cfg, cfg.d_ff)
+                               + cfg.d_model * cfg.resolved_head_dim
+                               * (cfg.num_heads + 2 * cfg.num_kv_heads)
+                               + cfg.num_heads * cfg.resolved_head_dim * cfg.d_model
+                               + cfg.d_model)  # + cross-attn
+        n += cfg.encoder_layers * _dense_block_params(cfg, cfg.d_ff)
+    return int(n)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+
+def shape_by_name(name: str) -> ShapeConfig:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+ARCH_IDS: Tuple[str, ...] = (
+    "qwen3_moe_235b_a22b",
+    "qwen3_0_6b",
+    "nemotron_4_340b",
+    "qwen1_5_110b",
+    "zamba2_1_2b",
+    "xlstm_125m",
+    "gemma2_2b",
+    "granite_moe_3b_a800m",
+    "phi_3_vision_4_2b",
+    "whisper_small",
+)
+
+# public --arch ids (dashes/dots) -> module names
+ARCH_ALIASES = {
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "xlstm-125m": "xlstm_125m",
+    "gemma2-2b": "gemma2_2b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "phi-3-vision-4.2b": "phi_3_vision_4_2b",
+    "whisper-small": "whisper_small",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod_name = ARCH_ALIASES.get(arch, arch).replace("-", "_").replace(".", "_")
+    if mod_name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCH_ALIASES)}")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    """Reduced variant of the same family: <=2 layers, d_model<=512, <=4 experts."""
+    mod_name = ARCH_ALIASES.get(arch, arch).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.smoke_config()
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}

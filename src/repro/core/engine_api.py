@@ -1,0 +1,57 @@
+"""Engine protocol shared by the real JAX slot engine (repro.rollout.engine)
+and the discrete-event simulator (repro.rollout.sim).
+
+The controller only speaks this interface, so scheduling policies are
+validated against the simulator and executed unchanged against the real
+engine — the co-design the paper's infrastructure section describes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Protocol, Sequence
+
+from repro.core.buffer import BufferEntry
+
+
+@dataclasses.dataclass
+class StepEvent:
+    """One slot's outcome for one decode step."""
+    uid: int
+    token: int
+    logprob: float
+    done: bool
+    finish_reason: Optional[str] = None   # set when done
+
+
+class EngineProtocol(Protocol):
+    capacity: int            # Q — max concurrent requests (slot count)
+
+    @property
+    def clock(self) -> float:                     # seconds (real or virtual)
+        ...
+
+    def free_slots(self) -> int: ...
+
+    def active_uids(self) -> List[int]: ...
+
+    def submit(self, entries: Sequence[BufferEntry], version: int) -> None:
+        """Prefill prompts (plus any scavenged prefix in partial mode) into
+        free slots.  Raises if not enough slots."""
+        ...
+
+    def step(self) -> List[StepEvent]:
+        """Advance every active slot one token.  Completed slots are freed
+        and reported with done=True."""
+        ...
+
+    def interrupt(self, uids: Optional[Sequence[int]] = None) -> List[int]:
+        """Early termination: stop the given (default: all) active requests,
+        free their slots, and return their uids.  Generated tokens were
+        already reported through step()."""
+        ...
+
+    def sync_weights(self, version: int) -> None:
+        """Make the engine generate with the given policy version (weight
+        sync after a trainer update).  The real engine shares the
+        TrainState so this is O(1); the simulator models a latency."""
+        ...

@@ -1,0 +1,65 @@
+"""Rollout utilisation metrics — paper Eq. 4:
+
+    BubbleRatio = sum_k (Q - r_k) * dt_k / (T * Q)
+
+where Q is the engine queue (slot) capacity, r_k the number of running
+requests during interval k, dt_k its duration, and T total elapsed time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+
+@dataclasses.dataclass
+class RolloutMetrics:
+    capacity: int
+    intervals: List[Tuple[int, float]] = dataclasses.field(default_factory=list)
+    tokens_generated: int = 0
+    prompts_prefilled: int = 0
+    tokens_discarded: int = 0       # on-policy scavenging waste
+    harvests: int = 0
+    updates: int = 0
+
+    def record(self, running: int, dt: float, new_tokens: int = 0) -> None:
+        if dt > 0:
+            self.intervals.append((running, dt))
+        self.tokens_generated += new_tokens
+
+    @property
+    def elapsed(self) -> float:
+        return sum(dt for _, dt in self.intervals)
+
+    @property
+    def bubble_ratio(self) -> float:
+        T = self.elapsed
+        if T <= 0 or self.capacity <= 0:
+            return 0.0
+        wasted = sum((self.capacity - r) * dt for r, dt in self.intervals)
+        return wasted / (T * self.capacity)
+
+    @property
+    def throughput(self) -> float:
+        """Output tokens per unit time (kept tokens only)."""
+        T = self.elapsed
+        return self.tokens_generated / T if T > 0 else 0.0
+
+    def merge(self, other: "RolloutMetrics") -> None:
+        assert other.capacity == self.capacity
+        self.intervals.extend(other.intervals)
+        self.tokens_generated += other.tokens_generated
+        self.prompts_prefilled += other.prompts_prefilled
+        self.tokens_discarded += other.tokens_discarded
+        self.harvests += other.harvests
+        self.updates += other.updates
+
+    def summary(self) -> dict:
+        return {
+            "elapsed": round(self.elapsed, 3),
+            "bubble_ratio": round(self.bubble_ratio, 4),
+            "throughput_tok_per_s": round(self.throughput, 1),
+            "tokens_generated": self.tokens_generated,
+            "tokens_discarded": self.tokens_discarded,
+            "harvests": self.harvests,
+            "updates": self.updates,
+        }

@@ -1,0 +1,96 @@
+"""Logical-axis sharding: models annotate activations/params with logical
+axis names; a context-installed rule set maps them to mesh axes.
+
+Outside any context (unit tests, CPU smoke runs) every annotation is a
+no-op, so the model code is mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _current() -> Optional[Tuple[Mesh, Dict[str, object]]]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: Dict[str, object]):
+    """Install (mesh, logical->mesh-axis rules) for the enclosed region.
+
+    ``rules`` maps a logical axis name to a mesh axis name, a tuple of mesh
+    axis names, or None (replicated).
+    """
+    prev = _current()
+    _state.ctx = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def logical_to_spec(logical: Sequence[Optional[str]],
+                    rules: Dict[str, object]) -> P:
+    parts = []
+    for name in logical:
+        if name is None:
+            parts.append(None)
+        else:
+            parts.append(rules.get(name))
+    return P(*parts)
+
+
+def logical_constraint(x, logical: Sequence[Optional[str]]):
+    """with_sharding_constraint by logical axis names (no-op w/o context)."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = logical_to_spec(logical, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Standard rule sets
+# ---------------------------------------------------------------------------
+
+def train_rules(multi_pod: bool = False) -> Dict[str, object]:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": batch,
+        "seq": None,
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "ffn": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_capacity": None,
+        "ssm_heads": "model",
+        "ssm_state": None,
+        # FSDP: parameters stored sharded over the data axis on this
+        # logical axis (biggest dim of each weight), gathered on use.
+        "fsdp": batch,
+        "cache_seq": None,
+    }
+
+
+def decode_rules(multi_pod: bool = False, context_parallel: bool = False
+                 ) -> Dict[str, object]:
+    """Decode: batch over data; long-context mode shards the KV cache's
+    sequence axis over `data` (distributed flash-decode combine)."""
+    batch = ("pod", "data") if multi_pod else ("data",)
+    r = train_rules(multi_pod)
+    if context_parallel:
+        r["batch"] = ("pod",) if multi_pod else None
+        r["cache_seq"] = "data"
+    else:
+        r["batch"] = batch
+    return r

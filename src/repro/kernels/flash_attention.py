@@ -1,0 +1,113 @@
+"""Causal GQA flash-attention Pallas TPU kernel (prefill path).
+
+Partial-mode resume re-prefills scavenged prefixes (paper §3.2), so prefill
+throughput is on the rollout critical path alongside decode.  Blockwise
+online softmax with causal *and* sliding-window block skipping: a kv block
+is visited only when it intersects [q_start - window, q_end] — local
+(gemma2) layers touch O(S * W) instead of O(S^2) work.
+
+Tiling: grid (B, H, S//block_q, S//block_k); (block_q, D) query tile and
+(block_k, D) kv tiles in VMEM; f32 scratch accumulators.  GQA maps query
+head h to kv head h // (H // Kh) in the BlockSpec index map.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, block_q: int, block_k: int, window: int, softcap: float,
+            scale: float):
+    qblk = pl.program_id(2)
+    kblk = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kblk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qblk * block_q
+    k_start = kblk * block_k
+    # causal skip: kv block entirely after the q block
+    visible = k_start <= q_start + block_q - 1
+    if window > 0:
+        # window skip: kv block entirely before the window of every q row
+        visible = jnp.logical_and(
+            visible, k_start + block_k - 1 >= q_start - window + 1)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32) * scale          # (bq, D)
+        k = k_ref[...].astype(jnp.float32)                  # (bk, D)
+        v = v_ref[...].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = qpos >= kpos
+        if window > 0:
+            mask = jnp.logical_and(mask, qpos - kpos < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                                 # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kblk == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    block_q: int = 128, block_k: int = 128,
+                    window: int = 0, softcap: float = 0.0,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q: (B, S, H, D); k/v: (B, S, Kh, D) -> (B, S, H, D).  Causal."""
+    B, S, H, D = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    grid = (B, H, S // block_q, S // block_k)
+    kernel = functools.partial(_kernel, block_q=block_q, block_k=block_k,
+                               window=window, softcap=softcap,
+                               scale=1.0 / math.sqrt(D))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, None, D),
+                         lambda b, h, qb, kb: (b, qb, h, 0)),
+            pl.BlockSpec((None, block_k, None, D),
+                         lambda b, h, qb, kb: (b, kb, h // G, 0)),
+            pl.BlockSpec((None, block_k, None, D),
+                         lambda b, h, qb, kb: (b, kb, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, None, D),
+                               lambda b, h, qb, kb: (b, qb, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+        name="flash_attention",
+    )(q, k, v)

@@ -1,0 +1,36 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``use_pallas(True)`` switches the model layers onto the kernels (TPU); the
+default pure-jnp path is used on CPU and as the oracle.  ``interpret``
+defaults to True because this container is CPU-only — on real TPU set
+``REPRO_PALLAS_INTERPRET=0``.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.ragged_decode_attention import (
+    ragged_decode_attention as _ragged)
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "softcap"))
+def ragged_decode_attention(q, k_cache, v_cache, kv_len, block_k: int = 128,
+                            softcap: float = 0.0):
+    return _ragged(q, k_cache, v_cache, kv_len, block_k=block_k,
+                   softcap=softcap, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_q", "block_k", "window",
+                                    "softcap"))
+def flash_attention(q, k, v, block_q: int = 128, block_k: int = 128,
+                    window: int = 0, softcap: float = 0.0):
+    return _flash(q, k, v, block_q=block_q, block_k=block_k, window=window,
+                  softcap=softcap, interpret=INTERPRET)

@@ -1,0 +1,113 @@
+"""Ragged GQA decode-attention Pallas TPU kernel — the rollout hotolayer.
+
+One new token per slot attends over a per-slot-length KV cache.  This is
+the kernel the paper's scheduling feeds: length-sorted batches mean
+neighbouring slots share similar ``kv_len``, so the kv-block skip pattern
+(``@pl.when`` on block start < kv_len) is uniform across the grid and the
+engine streams only live cache — the TPU-native payoff of SortedRL's
+sorting (see DESIGN.md §3).
+
+Tiling: grid (B, S // block_k); each program holds the full (H, D) query
+tile in VMEM plus one (block_k, Kh, D) cache tile; flash-decode online
+softmax accumulates in VMEM scratch across the sequential k dimension.
+MXU alignment: block_k multiples of 128; D is the lane dimension.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(kv_len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, block_k: int, softcap: float):
+    """Refs: kv_len (1,) i32 | q (H, D) | k/v (block_k, Kh, D) |
+    o (H, D) | scratch m/l (H, 1) f32, acc (H, D) f32."""
+    kblk = pl.program_id(1)
+    nk = pl.num_programs(1)
+    kv_len = kv_len_ref[0]
+
+    @pl.when(kblk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kstart = kblk * block_k
+
+    @pl.when(kstart < kv_len)           # ragged block skip
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)            # (H, D)
+        k = k_ref[...].astype(jnp.float32)            # (bk, Kh, D)
+        v = v_ref[...].astype(jnp.float32)
+        H, D = q.shape
+        bk, Kh, _ = k.shape
+        G = H // Kh
+        qg = q.reshape(Kh, G, D) / math.sqrt(D)
+        s = jnp.einsum("hgd,khd->hgk", qg, k,
+                       preferred_element_type=jnp.float32)   # (Kh, G, bk)
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        pos = kstart + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bk), 2)
+        s = jnp.where(pos < kv_len, s, NEG_INF)
+        m_prev = m_ref[...].reshape(Kh, G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(pos < kv_len, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                      # (Kh, G, 1)
+        l_new = l_ref[...].reshape(Kh, G, 1) * alpha + jnp.sum(
+            p, axis=-1, keepdims=True)
+        pv = jnp.einsum("hgk,khd->hgd", p, v,
+                        preferred_element_type=jnp.float32)
+        acc_ref[...] = (acc_ref[...].reshape(Kh, G, D) * alpha
+                        + pv).reshape(H, D)
+        m_ref[...] = m_new.reshape(H, 1)
+        l_ref[...] = l_new.reshape(H, 1)
+
+    @pl.when(kblk == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def ragged_decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                            v_cache: jnp.ndarray, kv_len: jnp.ndarray,
+                            *, block_k: int = 128, softcap: float = 0.0,
+                            interpret: bool = True) -> jnp.ndarray:
+    """q: (B, H, D); k/v_cache: (B, S, Kh, D); kv_len: (B,) -> (B, H, D).
+
+    ``interpret=True`` executes the kernel body in Python on CPU (this
+    container); on TPU pass interpret=False for the compiled kernel.
+    """
+    B, H, D = q.shape
+    S, Kh = k_cache.shape[1], k_cache.shape[2]
+    assert S % block_k == 0, (S, block_k)
+    nk = S // block_k
+    grid = (B, nk)
+    kernel = functools.partial(_kernel, block_k=block_k, softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, kb: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((None, H, D), lambda b, kb: (b, 0, 0)),
+            pl.BlockSpec((None, block_k, Kh, D), lambda b, kb: (b, kb, 0, 0)),
+            pl.BlockSpec((None, block_k, Kh, D), lambda b, kb: (b, kb, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, H, D), lambda b, kb: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, D), jnp.float32),
+        ],
+        interpret=interpret,
+        name="ragged_decode_attention",
+    )(kv_len, q, k_cache, v_cache)

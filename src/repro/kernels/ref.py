@@ -1,0 +1,19 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def ragged_decode_attention_ref(q, k_cache, v_cache, kv_len,
+                                softcap: float = 0.0) -> jnp.ndarray:
+    """(B, H, D) x (B, S, Kh, D) x (B,) -> (B, H, D)."""
+    return L.decode_attention(q, k_cache, v_cache, kv_len, softcap=softcap)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0) -> jnp.ndarray:
+    """(B, S, H, D) GQA causal attention oracle."""
+    return L.full_attention(q, k, v, causal=causal, window=window,
+                            softcap=softcap)

@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) combination with ShapeDtypeStruct stand-ins (no allocation), print
+memory_analysis / cost_analysis, and extract the roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out FILE]
+
+NOTE the XLA_FLAGS line above MUST run before any jax import (device count
+locks on first init).  Tests/benches must NOT import this module.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Dict, Optional
+
+import jax
+
+from repro.launch.hlo_cost import analyse_hlo
+from repro.configs.base import (ARCH_ALIASES, ARCH_IDS, SHAPES, ModelConfig,
+                                get_config, shape_by_name)
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.launch.plans import SKIPS, get_plan
+from repro.launch.steps import build_step
+
+COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^=]*=\s*\(?([a-z0-9]+)\[([0-9,]*)\]")
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s32": 4, "u32": 4,
+               "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output-shape bytes of every collective op in the (SPMD,
+    per-device) HLO.  Returns per-kind byte counts."""
+    out: Dict[str, float] = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        kind, dtype, dims = m.group(1), m.group(2), m.group(3)
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[kind] = out.get(kind, 0.0) + n * DTYPE_BYTES[dtype]
+    return out
+
+
+def analyse(arch: str, shape_name: str, multi_pod: bool,
+            verbose: bool = True, overrides: Optional[Dict] = None
+            ) -> Optional[Dict]:
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    akey = ARCH_ALIASES.get(arch, arch).replace("-", "_").replace(".", "_")
+    plan = get_plan(akey, shape_name)
+    if plan is None:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": SKIPS[(akey, shape_name)]}
+    if overrides:
+        plan = _dc.replace(plan, **overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 512 if multi_pod else 256
+    t0 = time.time()
+    built = build_step(cfg, shape, plan, mesh, multi_pod)
+    jitted = jax.jit(built.fn, in_shardings=built.in_shardings,
+                     out_shardings=built.out_shardings,
+                     donate_argnums=built.donate_argnums)
+    lowered = jitted.lower(*built.in_specs)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    # loop-aware analysis over the per-device SPMD HLO (XLA's own
+    # cost_analysis counts while bodies once — see hlo_cost.py)
+    t0 = time.time()
+    hc = analyse_hlo(compiled.as_text())
+    t_cost = time.time() - t0
+    flops = hc["flops"]                   # per device
+    bytes_accessed = hc["bytes"]
+    coll = hc["collectives"]
+    coll_total = hc["collective_bytes"]
+    xla_cost = compiled.cost_analysis()
+
+    # roofline terms (seconds, per device = per step on the critical path)
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = bytes_accessed / HBM_BW
+    t_coll = coll_total / ICI_BW
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+
+    # MODEL_FLOPS: useful math for this step, per device.
+    # N from the actual parameter tree (exact); MoE active = top-k fraction
+    # of the expert weights.
+    import math as _math
+    import jax.tree_util as jtu
+    N = N_active = 0
+    for path, leaf in jtu.tree_flatten_with_path(built.in_specs[0])[0]:
+        size = _math.prod(leaf.shape)
+        N += size
+        names = [str(getattr(p, "key", "")) for p in path]
+        if cfg.family == "moe" and names[-1] in ("w_in", "w_gate", "w_out") \
+                and len(leaf.shape) >= 3:
+            size = size * cfg.moe.experts_per_token / cfg.moe.num_experts
+        N_active += size
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    if shape.kind == "train":
+        model_flops = 6 * N_active * tokens
+    else:
+        model_flops = 2 * N_active * tokens
+    model_flops_per_dev = model_flops / chips
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "plan": {"strategy": plan.strategy, "fsdp": plan.fsdp,
+                 "seq_parallel": plan.seq_parallel, "remat": plan.remat,
+                 "microbatches": plan.microbatches,
+                 "decode_cache": plan.decode_cache},
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "cost_s": round(t_cost, 1),
+        "xla_flops_unrolled_once": float(xla_cost.get("flops", 0.0)),
+        "per_device": {
+            "flops": flops,
+            "bytes_accessed": bytes_accessed,
+            "collective_bytes": coll_total,
+            "collectives": coll,
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_hbm_gb": round((mem.argument_size_in_bytes
+                                  + mem.output_size_in_bytes
+                                  + mem.temp_size_in_bytes
+                                  - mem.alias_size_in_bytes) / 2**30, 2),
+        },
+        "roofline": {
+            "compute_s": t_compute, "memory_s": t_memory,
+            "collective_s": t_coll, "dominant": dominant,
+            "model_flops_per_dev": model_flops_per_dev,
+            "useful_flops_ratio": (model_flops_per_dev / flops
+                                   if flops else 0.0),
+        },
+        "params_total": N, "params_active": N_active,
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} ({rec['mesh']}) "
+              f"lower={t_lower:.0f}s compile={t_compile:.0f}s")
+        print(f"   memory_analysis: args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+              f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB "
+              f"alias={mem.alias_size_in_bytes/2**30:.2f}GiB "
+              f"peak~{rec['per_device']['peak_hbm_gb']}GiB/device")
+        print(f"   cost_analysis: flops/dev={flops:.3e} bytes/dev={bytes_accessed:.3e} "
+              f"coll/dev={coll_total:.3e} {coll}")
+        r = rec["roofline"]
+        print(f"   roofline: compute={r['compute_s']*1e3:.2f}ms "
+              f"memory={r['memory_s']*1e3:.2f}ms "
+              f"collective={r['collective_s']*1e3:.2f}ms "
+              f"dominant={dominant} useful={r['useful_flops_ratio']:.2f}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--override", default=None,
+                    help="plan overrides, e.g. 'microbatches=1,decode_2d=True'")
+    args = ap.parse_args()
+
+    results = []
+    combos = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = [s.name for s in SHAPES] if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+    failures = 0
+    overrides = {}
+    if args.override:
+        import ast
+        for kv in args.override.split(","):
+            k, v = kv.split("=")
+            overrides[k] = ast.literal_eval(v)
+    for a, s, mp in combos:
+        try:
+            rec = analyse(a, s, mp, overrides=overrides or None)
+            if rec.get("skipped"):
+                print(f"== {a} x {s}: SKIPPED ({rec['reason']})")
+            results.append(rec)
+        except Exception as e:  # noqa
+            failures += 1
+            print(f"== {a} x {s} multi_pod={mp} FAILED: {type(e).__name__}: {e}")
+            results.append({"arch": a, "shape": s, "multi_pod": mp,
+                            "error": f"{type(e).__name__}: {e}"})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

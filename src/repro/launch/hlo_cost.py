@@ -1,0 +1,319 @@
+"""Loop-aware cost analysis over compiled (post-SPMD, per-device) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, which
+under-counts every scanned layer stack by its depth (a 96-layer model shows
+1/96th of its FLOPs).  This analyzer parses the HLO module, multiplies each
+while body by its ``known_trip_count`` backend config, and reports:
+
+  * flops            — dots (2*M*N*K incl. batch) + elementwise + reduces
+  * bytes            — HBM-traffic model: operands+outputs of every
+                       top-level instruction (fusion internals are free)
+  * collective_bytes — per collective kind, output-shape bytes x trips
+
+All numbers are per device (the module is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s32": 4, "u32": 4,
+               "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+               "s4": 1, "u4": 1}
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "rsqrt", "sqrt", "negate", "abs", "sign", "floor", "ceil", "round",
+    "compare", "select", "and", "or", "not", "xor", "clamp", "convert",
+    "cosine", "sine", "logistic", "atan2", "remainder", "cbrt", "erf",
+}
+FREE = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+        "bitcast-convert", "after-all", "opt-barrier", "partition-id",
+        "replica-id", "iota", "reshape", "broadcast", "transpose", "copy",
+        "slice", "dynamic-slice", "dynamic-update-slice", "concatenate",
+        "pad", "reverse", "gather", "scatter", "reduce", "rng-bit-generator",
+        "custom-call", "infeed", "outfeed", "while", "conditional", "call",
+        "fusion", "dot", "convolution", "cholesky", "triangular-solve",
+        "sort", "map", "reduce-window", "select-and-scatter", "domain"}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "all-gather-start", "all-reduce-start",
+               "collective-permute-start")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?)\s([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?\s*->.*{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CALLS_RE = re.compile(r"(?:calls|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[float, float]:
+    """Total (elements, bytes) of a possibly-tuple type string."""
+    elems = 0.0
+    byts = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1.0
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * DTYPE_BYTES[dt]
+    return elems, byts
+
+
+class Instr:
+    __slots__ = ("name", "type_str", "opcode", "rest", "out_elems",
+                 "out_bytes")
+
+    def __init__(self, name, type_str, opcode, rest):
+        self.name = name
+        self.type_str = type_str.strip()
+        self.opcode = opcode
+        self.rest = rest
+        self.out_elems, self.out_bytes = _shape_elems_bytes(self.type_str)
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def parse_module(text: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        line = _COMMENT_RE.sub("", line)
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m and "{" in line:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.strip().startswith("}"):
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            comps[cur].append(Instr(m.group(1), m.group(2), m.group(3),
+                                    m.group(4)))
+    return comps
+
+
+def _dot_flops(instr: Instr, symtab: Dict[str, Instr]) -> float:
+    out_elems = instr.out_elems
+    # K: product of lhs contracting dim sizes
+    lhs_name = instr.rest.split(",")[0].strip().lstrip("%")
+    lhs = symtab.get(lhs_name)
+    m = _CONTRACT_RE.search(instr.rest)
+    if lhs is None or m is None:
+        return 2.0 * out_elems
+    sm = _SHAPE_RE.search(lhs.type_str)
+    if sm is None:
+        return 2.0 * out_elems
+    dims = [int(d) for d in sm.group(2).split(",") if d]
+    k = 1.0
+    for idx in (int(i) for i in m.group(1).split(",") if i):
+        if idx < len(dims):
+            k *= dims[idx]
+    return 2.0 * out_elems * k
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self.text = text
+        self._memo: Dict[str, Dict[str, float]] = {}
+        # map while-instruction -> trip count (by body computation name)
+        self.trips: Dict[str, int] = {}
+        for line in text.splitlines():
+            if " while(" in line:
+                tm = _TRIP_RE.search(line)
+                bm = re.search(r"body=%?([\w.\-]+)", line)
+                if bm:
+                    self.trips[bm.group(1)] = (int(tm.group(1)) if tm else 1)
+
+    def _entry_name(self) -> str:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", self.text, re.M)
+        if m:
+            return m.group(1)
+        return next(iter(self.comps))
+
+    def comp_cost(self, name: str, top: bool = True) -> Dict[str, float]:
+        key = (name, top)
+        if key in self._memo:
+            return self._memo[key]
+        total = {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0}
+        coll: Dict[str, float] = {}
+        self._memo[key] = total           # break recursion cycles
+        symtab = {i.name: i for i in self.comps.get(name, [])}
+        for instr in self.comps.get(name, []):
+            op = instr.opcode
+            if op == "while":
+                bm = _CALLS_RE.search(instr.rest)
+                cm = _COND_RE.search(instr.rest)
+                if bm:
+                    body = bm.group(1)
+                    trips = self.trips.get(body, 1)
+                    sub = self.comp_cost(body, top=top)
+                    for k in total:
+                        total[k] += sub[k] * trips
+                    for k, v in sub.get("_coll", {}).items():
+                        coll[k] = coll.get(k, 0.0) + v * trips
+                if cm:
+                    sub = self.comp_cost(cm.group(1), top=False)
+                    total["flops"] += sub["flops"]
+                continue
+            if op in ("fusion", "call", "map"):
+                bm = _CALLS_RE.search(instr.rest)
+                called = bm.group(1) if bm else None
+                out_bytes = instr.out_bytes
+                if called:
+                    sub = self.comp_cost(called, top=False)
+                    total["flops"] += sub["flops"]
+                    # in-place fusions (root = dynamic-update-slice on a
+                    # donated buffer) write the update region, not the
+                    # whole output buffer
+                    body = self.comps.get(called, [])
+                    if body and body[-1].opcode in ("dynamic-update-slice",
+                                                    "scatter"):
+                        ops_ = self._operands(body[-1],
+                                              {i.name: i for i in body})
+                        upd = sum(o.out_bytes for o in ops_[1:])
+                        out_bytes = min(out_bytes, 2 * upd)
+                    # fusion internal traffic is free; count boundary bytes
+                if top:
+                    total["bytes"] += out_bytes + \
+                        self._fusion_operand_bytes(instr, symtab, called)
+                continue
+            if op == "conditional":
+                branches = re.findall(r"(?:true_computation|false_computation|"
+                                      r"branch_computations=\{)%?([\w.\-]+)",
+                                      instr.rest)
+                for b in branches[:1]:
+                    sub = self.comp_cost(b, top=top)
+                    for k in total:
+                        total[k] += sub[k]
+                continue
+            if op == "dot" or op == "convolution":
+                total["flops"] += _dot_flops(instr, symtab)
+                if top:
+                    total["bytes"] += instr.out_bytes + self._operand_bytes(
+                        instr, symtab)
+                continue
+            if any(op.startswith(c) for c in COLLECTIVES):
+                total["collective_bytes"] += instr.out_bytes
+                coll[op.replace("-start", "")] = coll.get(
+                    op.replace("-start", ""), 0.0) + instr.out_bytes
+                if top:
+                    total["bytes"] += instr.out_bytes + self._operand_bytes(
+                        instr, symtab)
+                continue
+            if op in ELEMENTWISE:
+                total["flops"] += instr.out_elems
+            elif op.startswith("reduce"):
+                total["flops"] += self._operand_elems(instr, symtab)
+            if top and op not in ("parameter", "constant",
+                                  "get-tuple-element", "tuple", "bitcast",
+                                  "after-all", "opt-barrier"):
+                if op in ("dynamic-update-slice", "scatter"):
+                    # in-place region update: traffic = the update (read)
+                    # plus the written region, NOT the whole buffer
+                    ops_ = self._operands(instr, symtab)
+                    upd = sum(o.out_bytes for o in ops_[1:])
+                    total["bytes"] += 2.0 * upd
+                elif op in ("dynamic-slice", "slice", "gather"):
+                    total["bytes"] += 2.0 * instr.out_bytes
+                else:
+                    total["bytes"] += instr.out_bytes + self._operand_bytes(
+                        instr, symtab)
+        total["_coll"] = coll
+        self._memo[key] = total
+        return total
+
+    def _operands(self, instr: Instr, symtab) -> List[Instr]:
+        # operand list: leading names before attribute key=val pairs
+        ops = []
+        depth = 0
+        buf = ""
+        for ch in instr.rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    break
+                depth -= 1
+            if ch == "," and depth == 0:
+                ops.append(buf)
+                buf = ""
+            else:
+                buf += ch
+        if buf:
+            ops.append(buf)
+        out = []
+        for o in ops:
+            nm = o.strip().lstrip("%")
+            if nm in symtab:
+                out.append(symtab[nm])
+        return out
+
+    def _operand_bytes(self, instr: Instr, symtab) -> float:
+        return sum(o.out_bytes for o in self._operands(instr, symtab))
+
+    def _fusion_operand_bytes(self, instr: Instr, symtab,
+                              called: Optional[str]) -> float:
+        """Operand HBM bytes for a fusion: an operand that the fused
+        computation only touches via dynamic-slice contributes the SLICE
+        bytes, not the whole array (scan bodies slice one layer out of the
+        stacked weights — counting the full stack 13x over is wrong)."""
+        operands = self._operands(instr, symtab)
+        if called is None or called not in self.comps:
+            return sum(o.out_bytes for o in operands)
+        body = self.comps[called]
+        params = {}
+        for bi in body:
+            if bi.opcode == "parameter":
+                m = re.match(r"\s*(\d+)", bi.rest)
+                if m:
+                    params[int(m.group(1))] = bi.name
+        total = 0.0
+        for i, o in enumerate(operands):
+            pname = params.get(i)
+            if pname is None:
+                total += o.out_bytes
+                continue
+            users = [bi for bi in body
+                     if re.search(r"%?" + re.escape(pname) + r"\b", bi.rest)]
+            if users and all(u.opcode in ("dynamic-slice", "slice", "gather")
+                             for u in users):
+                total += sum(u.out_bytes for u in users)
+            elif users and all(u.opcode in ("dynamic-update-slice", "scatter")
+                               for u in users):
+                # whole-buffer passthrough with an in-place region write
+                upd = 0.0
+                for u in users:
+                    uops = self._operands(u, {i.name: i for i in body})
+                    upd += sum(x.out_bytes for x in uops[1:])
+                total += 2.0 * upd
+            else:
+                total += o.out_bytes
+        return total
+
+    def _operand_elems(self, instr: Instr, symtab) -> float:
+        return sum(o.out_elems for o in self._operands(instr, symtab))
+
+    def entry_cost(self) -> Dict[str, float]:
+        cost = dict(self.comp_cost(self._entry_name(), top=True))
+        coll = cost.pop("_coll", {})
+        cost["collectives"] = coll
+        return cost
+
+
+def analyse_hlo(text: str) -> Dict[str, float]:
+    return HloCost(text).entry_cost()

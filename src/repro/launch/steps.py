@@ -1,0 +1,237 @@
+"""Build the jit-able, sharded train/prefill/serve steps for one
+(architecture x shape x mesh) combination — the functions the dry-run
+lowers and the production launcher would execute.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import axis_rules
+from repro.launch.plans import (Plan, activation_rules, cache_specs_for,
+                                param_specs)
+from repro.models import model as model_lib
+from repro.rl.losses import LossConfig, total_loss
+from repro.train.optimizer import AdamWConfig, OptState, adamw_update
+
+
+def _ns(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+@dataclasses.dataclass
+class Built:
+    """Everything dryrun/train needs for one combination."""
+    fn: Any                     # the python step function
+    in_specs: Tuple             # ShapeDtypeStructs (positional)
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    rules: Dict[str, Any]
+    mesh: Mesh
+    model: Any
+
+
+def _batch_axes(multi_pod: bool, plan: Plan):
+    axes = ("pod", "data") if multi_pod else ("data",)
+    if plan.strategy == "dp":
+        axes = axes + ("model",)
+    return axes
+
+
+AXIS_SIZE = {"pod": 2, "data": 16, "model": 16}
+
+
+def _fit_batch_axes(B: int, axes):
+    """Trim trailing mesh axes until their product divides the batch."""
+    axes = tuple(axes)
+    while axes:
+        size = 1
+        for a in axes:
+            size *= AXIS_SIZE[a]
+        if B % size == 0:
+            return axes
+        axes = axes[:-1]
+    return ()
+
+
+def _round_len(n: int, align: int = 512) -> int:
+    """Cache lengths rounded to a 512 multiple so the sequence axis shards
+    cleanly over (data x model)."""
+    return -(-n // align) * align
+
+
+def _batch_spec(B: int, axes) -> P:
+    fit = _fit_batch_axes(B, axes)
+    if not fit:
+        return P()
+    return P(fit if len(fit) > 1 else fit[0])
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig, plan: Plan,
+                     mesh: Mesh, multi_pod: bool) -> Built:
+    cfg = cfg.replace(remat=plan.remat)
+    rules = activation_rules(plan, multi_pod, "train")
+    baxes = _batch_axes(multi_pod, plan)
+    model = model_lib.build_model(
+        cfg, ep_mesh=(mesh if cfg.family == "moe" else None),
+        data_axes=baxes)
+    loss_cfg = LossConfig()
+    opt_cfg = AdamWConfig(state_dtype=plan.opt_dtype)
+    nmicro = plan.microbatches
+
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch)
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            logits = logits[:, model.prefill_extra:]
+        return total_loss(logits, aux, batch, loss_cfg)
+
+    def train_step(params, opt_state, batch):
+        with axis_rules(mesh, rules):
+            if nmicro == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            else:
+                def split(x):
+                    return x.reshape(nmicro, x.shape[0] // nmicro,
+                                     *x.shape[1:])
+                mbs = jax.tree.map(split, batch)
+
+                def acc(carry, mb):
+                    gsum, lsum = carry
+                    (l, _), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, mb)
+                    gsum = jax.tree.map(jnp.add, gsum, g)
+                    return (gsum, lsum + l), None
+
+                g0 = jax.tree.map(jnp.zeros_like, params)
+                (grads, loss), _ = jax.lax.scan(acc, (g0, 0.0), mbs)
+                grads = jax.tree.map(lambda g: g / nmicro, grads)
+                loss = loss / nmicro
+                metrics = {}
+            params, opt_state, om = adamw_update(params, grads, opt_state,
+                                                 opt_cfg)
+            metrics = dict(metrics)
+            metrics.update(om)
+            metrics["loss"] = loss
+            return params, opt_state, metrics
+
+    # specs
+    params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    pspecs = param_specs(params_shape, cfg, plan)
+    opt_shape = OptState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        m=jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape,
+                                                      plan.opt_dtype),
+                       params_shape),
+        v=jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape,
+                                                      plan.opt_dtype),
+                       params_shape))
+    ospecs = OptState(step=P(), m=pspecs, v=pspecs)
+    batch_shape = model_lib.input_specs(cfg, shape.seq_len,
+                                        shape.global_batch, "train")
+    bspecs = {k: P(*(tuple(_batch_spec(v.shape[0], baxes)) +
+                     (None,) * (len(v.shape) - 1)))
+              for k, v in batch_shape.items()}
+
+    return Built(
+        fn=train_step,
+        in_specs=(params_shape, opt_shape, batch_shape),
+        in_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs),
+                      _ns(mesh, bspecs)),
+        out_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs), None),
+        donate_argnums=(0, 1),
+        rules=rules, mesh=mesh, model=model)
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, plan: Plan,
+                       mesh: Mesh, multi_pod: bool) -> Built:
+    cfg = cfg.replace(remat=False)
+    rules = activation_rules(plan, multi_pod, "prefill")
+    baxes = _batch_axes(multi_pod, plan)
+    model = model_lib.build_model(
+        cfg, ep_mesh=(mesh if cfg.family == "moe" else None),
+        data_axes=baxes)
+    max_len = _round_len(shape.seq_len + model.prefill_extra + 8)
+
+    def prefill_step(params, batch, cache):
+        with axis_rules(mesh, rules):
+            logits, cache = model.prefill(params, batch, cache)
+            # serving returns the next-token distribution at each slot end
+            last = logits[:, -1]
+            return jnp.argmax(last, axis=-1).astype(jnp.int32), cache
+
+    params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    pspecs = param_specs(params_shape, cfg, plan)
+    batch_shape = model_lib.input_specs(cfg, shape.seq_len,
+                                        shape.global_batch, "prefill")
+    bspecs = {k: P(*(tuple(_batch_spec(v.shape[0], baxes)) +
+                     (None,) * (len(v.shape) - 1)))
+              for k, v in batch_shape.items()}
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, max_len))
+    cspecs = cache_specs_for(cache_shape, cfg, plan, shape.global_batch,
+                             multi_pod)
+
+    return Built(
+        fn=prefill_step,
+        in_specs=(params_shape, batch_shape, cache_shape),
+        in_shardings=(_ns(mesh, pspecs), _ns(mesh, bspecs),
+                      _ns(mesh, cspecs)),
+        out_shardings=(None, _ns(mesh, cspecs)),
+        donate_argnums=(2,),
+        rules=rules, mesh=mesh, model=model)
+
+
+def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, plan: Plan,
+                     mesh: Mesh, multi_pod: bool) -> Built:
+    """Decode: ONE new token against a seq_len KV cache."""
+    cfg = cfg.replace(remat=False)
+    rules = activation_rules(plan, multi_pod, "decode")
+    baxes = _batch_axes(multi_pod, plan)
+    model = model_lib.build_model(
+        cfg, ep_mesh=None,   # decode uses the dense-dispatch MoE path
+        data_axes=baxes)
+    max_len = _round_len(shape.seq_len + model.prefill_extra + 8)
+
+    def serve_step(params, token, cache, kv_len):
+        with axis_rules(mesh, rules):
+            logits, cache = model.decode_step(params, token, cache, kv_len)
+            nxt = jnp.argmax(logits.astype(jnp.float32), axis=-1)
+            lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            lp = jnp.take_along_axis(lp, nxt[:, None], axis=1)[:, 0]
+            return nxt.astype(jnp.int32), lp, cache
+
+    params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    pspecs = param_specs(params_shape, cfg, plan)
+    B = shape.global_batch
+    token_shape = jax.ShapeDtypeStruct((B,), jnp.int32)
+    kv_shape = jax.ShapeDtypeStruct((B,), jnp.int32)
+    cache_shape = jax.eval_shape(lambda: model.init_cache(B, max_len))
+    cspecs = cache_specs_for(cache_shape, cfg, plan, B, multi_pod)
+    tspec = _batch_spec(B, baxes)
+
+    return Built(
+        fn=serve_step,
+        in_specs=(params_shape, token_shape, cache_shape, kv_shape),
+        in_shardings=(_ns(mesh, pspecs), NamedSharding(mesh, tspec),
+                      _ns(mesh, cspecs), NamedSharding(mesh, tspec)),
+        out_shardings=(NamedSharding(mesh, tspec),
+                       NamedSharding(mesh, tspec), _ns(mesh, cspecs)),
+        donate_argnums=(2,),
+        rules=rules, mesh=mesh, model=model)
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, plan: Plan, mesh: Mesh,
+               multi_pod: bool) -> Built:
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, plan, mesh, multi_pod)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, plan, mesh, multi_pod)
+    return build_serve_step(cfg, shape, plan, mesh, multi_pod)

@@ -1,0 +1,239 @@
+"""Zamba2-style hybrid [arXiv:2411.15242]: a Mamba2 backbone with a single
+*shared* attention+MLP block applied every ``attn_every`` SSM layers
+(weights shared across applications; each application has its own KV cache).
+
+Layout for L layers, k = attn_every:  g = L // k groups of (k mamba layers
++ shared attn block), then L - g*k tail mamba layers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import transformer as TF
+
+Params = Dict[str, Any]
+
+
+def _layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    k = cfg.attn_every
+    g = cfg.num_layers // k
+    tail = cfg.num_layers - g * k
+    return g, k, tail
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    g, k, tail = _layout(cfg)
+    dtype = cfg.param_dtype
+    keys = jax.random.split(key, cfg.num_layers + 4)
+    mamba = [S.init_mamba2(keys[i], cfg, dtype) for i in range(cfg.num_layers)]
+    main = [TF._stack(mamba[gi * k:(gi + 1) * k]) for gi in range(g)]
+    params: Params = {
+        "embed": (jax.random.normal(keys[-1], (cfg.vocab_size, cfg.d_model))
+                  * (1.0 / math.sqrt(cfg.d_model))).astype(dtype),
+        "mamba_main": TF._stack(main),                      # (g, k, ...)
+        "shared_attn": TF.init_block(keys[-2], cfg, dtype),
+        "final_norm": L.init_norm(keys[-3], cfg.d_model, cfg.norm_type, dtype),
+        "lm_head": (jax.random.normal(keys[-4], (cfg.d_model, cfg.vocab_size))
+                    * (1.0 / math.sqrt(cfg.d_model))).astype(dtype),
+    }
+    if tail:
+        params["mamba_tail"] = TF._stack(mamba[g * k:])     # (tail, ...)
+    return params
+
+
+def _shared_attn_forward(p, cfg, x, positions):
+    x, _ = TF.block_forward(p, cfg, x, positions, 0)
+    return x
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    x = TF.embed_tokens(params, cfg, tokens)
+    B, T = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    g, k, tail = _layout(cfg)
+
+    def group_body(h, gparams):
+        def mamba_body(hh, mp):
+            return hh + S.mamba2_forward(mp, cfg, hh), None
+        h, _ = jax.lax.scan(mamba_body, h, gparams)
+        h = _shared_attn_forward(params["shared_attn"], cfg, h, positions)
+        return h, None
+
+    if cfg.remat:
+        group_body = jax.checkpoint(group_body, prevent_cse=False)
+    x, _ = jax.lax.scan(group_body, x, params["mamba_main"])
+    if tail:
+        def mamba_body(hh, mp):
+            return hh + S.mamba2_forward(mp, cfg, hh), None
+        x, _ = jax.lax.scan(mamba_body, x, params["mamba_tail"])
+    return TF.lm_logits(params, cfg, x)
+
+
+# ---------------------------------------------------------------------------
+# Cache: ssm+conv state per mamba layer, KV cache per shared-attn application
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> Dict[str, jnp.ndarray]:
+    dtype = dtype or cfg.compute_dtype
+    g, k, tail = _layout(cfg)
+    d_inner, nheads, conv_dim = S.mamba2_dims(cfg)
+    s = cfg.ssm
+    gN = 2 * s.ngroups * s.state_dim
+    Kh, D = cfg.num_kv_heads, cfg.resolved_head_dim
+    Kc = s.conv_width - 1
+    cache = {
+        "ssm_main": jnp.zeros((g, k, batch, nheads, s.state_dim, s.head_dim),
+                              jnp.float32),
+        "conv_x_main": jnp.zeros((g, k, batch, Kc, d_inner), dtype),
+        "conv_bc_main": jnp.zeros((g, k, batch, Kc, gN), dtype),
+        "attn_k": jnp.zeros((g, batch, max_len, Kh, D), dtype),
+        "attn_v": jnp.zeros((g, batch, max_len, Kh, D), dtype),
+    }
+    if tail:
+        cache["ssm_tail"] = jnp.zeros(
+            (tail, batch, nheads, s.state_dim, s.head_dim), jnp.float32)
+        cache["conv_x_tail"] = jnp.zeros((tail, batch, Kc, d_inner), dtype)
+        cache["conv_bc_tail"] = jnp.zeros((tail, batch, Kc, gN), dtype)
+    return cache
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            cache: Dict[str, jnp.ndarray], prompt_lens: jnp.ndarray,
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """NOTE: SSM state prefill with *ragged* prompt lengths would require
+    per-slot state snapshots at prompt_lens; we require right-aligned
+    (left-padded) prompts for hybrid/ssm archs instead — the engine pads
+    left so every slot's last token sits at position S-1 and states are
+    exact.  Padding tokens decay into the state with x=0 contributions via
+    a mask."""
+    x = TF.embed_tokens(params, cfg, tokens)
+    B, T = x.shape[:2]
+    # left-padded: valid tokens occupy [T - len, T)
+    positions = (jnp.arange(T)[None] - (T - prompt_lens)[:, None])
+    valid = positions >= 0
+    x = jnp.where(valid[..., None], x, 0)
+    positions = jnp.maximum(positions, 0)
+    g, k, tail = _layout(cfg)
+
+    def group_body(carry, xs):
+        h = carry
+        gparams, ssm_g, cvx_g, cvbc_g, kc, vc = xs
+
+        def mamba_body(hh, ms):
+            mp, st, cvx, cvbc = ms
+            out, (st2, (cvx2, cvbc2)) = S.mamba2_forward(
+                mp, cfg, jnp.where(valid[..., None], hh, 0),
+                init_state=None, conv_init=None, return_state=True)
+            return (hh + jnp.where(valid[..., None], out, 0),
+                    (st2, cvx2, cvbc2))
+
+        h, (ssm_new, cvx_new, cvbc_new) = jax.lax.scan(
+            mamba_body, h, (gparams, ssm_g, cvx_g, cvbc_g))
+        # shared attention with its own cache slot
+        bp = params["shared_attn"]
+        hn = L.norm(h, bp["ln1"], cfg.norm_type, cfg.norm_eps)
+        q, kk, vv = L.qkv_project(bp["attn"], cfg, hn, positions)
+        seg = valid.astype(jnp.int32)
+        if T <= TF.FULL_ATTN_MAX_SEQ:
+            o = L.full_attention(q, kk, vv, causal=True, seg_q=seg, seg_k=seg)
+        else:
+            o = L.blockwise_attention(q, kk, vv, causal=True)
+        h = h + jnp.where(valid[..., None], L.attn_output(bp["attn"], o), 0)
+        hn = L.norm(h, bp["ln2"], cfg.norm_type, cfg.norm_eps)
+        h = h + jnp.where(valid[..., None],
+                          L.mlp(bp["mlp"], hn, cfg.mlp_act, cfg.gated_mlp), 0)
+        kc = kc.at[:, :T].set(kk.astype(kc.dtype))
+        vc = vc.at[:, :T].set(vv.astype(vc.dtype))
+        return h, (ssm_new, cvx_new, cvbc_new, kc, vc)
+
+    x, (ssm_m, cvx_m, cvbc_m, kc, vc) = jax.lax.scan(
+        group_body, x, (params["mamba_main"], cache["ssm_main"],
+                        cache["conv_x_main"], cache["conv_bc_main"],
+                        cache["attn_k"], cache["attn_v"]))
+    cache = dict(cache, ssm_main=ssm_m, conv_x_main=cvx_m,
+                 conv_bc_main=cvbc_m, attn_k=kc, attn_v=vc)
+    if tail:
+        def mamba_body(hh, ms):
+            mp, st, cvx, cvbc = ms
+            out, (st2, (cvx2, cvbc2)) = S.mamba2_forward(
+                mp, cfg, jnp.where(valid[..., None], hh, 0),
+                return_state=True)
+            return (hh + jnp.where(valid[..., None], out, 0),
+                    (st2, cvx2, cvbc2))
+        x, (st_t, cvx_t, cvbc_t) = jax.lax.scan(
+            mamba_body, x, (params["mamba_tail"], cache["ssm_tail"],
+                            cache["conv_x_tail"], cache["conv_bc_tail"]))
+        cache = dict(cache, ssm_tail=st_t, conv_x_tail=cvx_t,
+                     conv_bc_tail=cvbc_t)
+    logits = TF.lm_logits(params, cfg, x)
+    return logits, cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
+                cache: Dict[str, jnp.ndarray], kv_len: jnp.ndarray,
+                kv_start: Optional[jnp.ndarray] = None,
+                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """token (B,), kv_len (B,): write index in the attention caches (the
+    SSM state implicitly encodes the same history).  ``kv_start``: first
+    valid cache row per slot (left-padded prefills)."""
+    x = TF.embed_tokens(params, cfg, token[:, None])[:, 0]   # (B, d)
+    g, k, tail = _layout(cfg)
+    B = x.shape[0]
+    if kv_start is None:
+        kv_start = jnp.zeros_like(kv_len)
+    positions = kv_len - kv_start
+
+    def group_body(h, xs):
+        gparams, ssm_g, cvx_g, cvbc_g, kc, vc = xs
+
+        def mamba_body(hh, ms):
+            mp, st, cvx, cvbc = ms
+            out, st2, (cvx2, cvbc2) = S.mamba2_decode(mp, cfg, hh, st,
+                                                      (cvx, cvbc))
+            return hh + out, (st2, cvx2, cvbc2)
+
+        h, (ssm_new, cvx_new, cvbc_new) = jax.lax.scan(
+            mamba_body, h, (gparams, ssm_g, cvx_g, cvbc_g))
+        bp = params["shared_attn"]
+        hn = L.norm(h[:, None], bp["ln1"], cfg.norm_type, cfg.norm_eps)
+        q, kk, vv = L.qkv_project(bp["attn"], cfg, hn, positions[:, None])
+        kc = TF._write_token(kc[None], kk[None, :, 0], kv_len)[0]
+        vc = TF._write_token(vc[None], vv[None, :, 0], kv_len)[0]
+        o = L.decode_attention(q[:, 0], kc, vc, kv_len + 1,
+                               kv_start=kv_start)
+        h = h + L.attn_output(bp["attn"], o[:, None])[:, 0]
+        hn = L.norm(h[:, None], bp["ln2"], cfg.norm_type, cfg.norm_eps)
+        h = h + L.mlp(bp["mlp"], hn, cfg.mlp_act, cfg.gated_mlp)[:, 0]
+        return h, (ssm_new, cvx_new, cvbc_new, kk[:, 0], vv[:, 0])
+
+    x, (ssm_m, cvx_m, cvbc_m, k_new, v_new) = jax.lax.scan(
+        group_body, x, (params["mamba_main"], cache["ssm_main"],
+                        cache["conv_x_main"], cache["conv_bc_main"],
+                        cache["attn_k"], cache["attn_v"]))
+    cache = dict(cache,
+                 ssm_main=ssm_m, conv_x_main=cvx_m, conv_bc_main=cvbc_m,
+                 attn_k=TF._write_token(cache["attn_k"], k_new, kv_len),
+                 attn_v=TF._write_token(cache["attn_v"], v_new, kv_len))
+    if tail:
+        def mamba_body(hh, ms):
+            mp, st, cvx, cvbc = ms
+            out, st2, (cvx2, cvbc2) = S.mamba2_decode(mp, cfg, hh, st,
+                                                      (cvx, cvbc))
+            return hh + out, (st2, cvx2, cvbc2)
+        x, (st_t, cvx_t, cvbc_t) = jax.lax.scan(
+            mamba_body, x, (params["mamba_tail"], cache["ssm_tail"],
+                            cache["conv_x_tail"], cache["conv_bc_tail"]))
+        cache = dict(cache, ssm_tail=st_t, conv_x_tail=cvx_t,
+                     conv_bc_tail=cvbc_t)
+    logits = TF.lm_logits(params, cfg, x)
+    return logits, cache

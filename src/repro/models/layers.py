@@ -1,0 +1,332 @@
+"""Shared model building blocks: norms, rotary embeddings, attention
+(GQA / qk-norm / bias / soft-cap / sliding-window / blockwise-causal),
+MLP variants.  Pure functional: params are dicts of jnp arrays.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint
+
+Params = Dict[str, jnp.ndarray]
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm(x, p: Params, kind: str, eps: float):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["scale"], eps)
+    return layernorm(x, p["scale"], p["bias"], eps)
+
+
+def init_norm(key, d: int, kind: str, dtype) -> Params:
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (D/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs   # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]               # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(length: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(10000.0) / d))
+    emb = jnp.zeros((length, d), jnp.float32)
+    emb = emb.at[:, 0::2].set(jnp.sin(pos * div))
+    emb = emb.at[:, 1::2].set(jnp.cos(pos * div))
+    return emb
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return jnp.tanh(x / cap) * cap if cap > 0 else x
+
+
+def full_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                   causal: bool = True, window: int = 0, softcap: float = 0.0,
+                   q_offset: int = 0, seg_q=None, seg_k=None) -> jnp.ndarray:
+    """Reference attention, materialises (B, H, Sq, Sk) scores in f32.
+
+    q: (B, Sq, H, D); k/v: (B, Sk, Kh, D) with H = Kh * G (GQA).
+    Used for short sequences and as the oracle for the Pallas kernels.
+    """
+    B, Sq, H, D = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+    qf = q.astype(jnp.float32).reshape(B, Sq, Kh, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) / math.sqrt(D)
+    scores = _softcap(scores, softcap)
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    mask_b = jnp.broadcast_to(mask, (B,) + mask.shape)
+    if seg_q is not None:
+        mask_b &= seg_q[:, :, None] == seg_k[:, None, :]
+    scores = jnp.where(mask_b[:, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)   # fully-masked rows
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, vf)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: int = 0,
+                        softcap: float = 0.0,
+                        q_block: int = 512, k_block: int = 1024) -> jnp.ndarray:
+    """Memory-bounded causal attention: lax.map over q blocks, lax.scan over
+    kv blocks with online-softmax carry.  O(Sq/Bq * B*H*Bq*Bk) temp memory.
+
+    This is the pure-JAX flash-attention used for long-sequence prefill on
+    every backend; the Pallas kernel implements the same tiling for TPU.
+    """
+    B, Sq, H, D = q.shape
+    Sk, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    Sq_orig, Sk_orig = Sq, Sk
+    if Sq % q_block:
+        q = jnp.pad(q, ((0, 0), (0, q_block - Sq % q_block), (0, 0), (0, 0)))
+        Sq = q.shape[1]
+    if Sk % k_block:
+        # padded keys are masked out via the kpos < Sk_orig check below
+        k = jnp.pad(k, ((0, 0), (0, k_block - Sk % k_block), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, k_block - Sk % k_block), (0, 0), (0, 0)))
+        Sk = k.shape[1]
+    nq, nk = Sq // q_block, Sk // k_block
+    scale = 1.0 / math.sqrt(D)
+
+    # GQA via kv-head repetition, NOT head-dim folding: a (Kh, G) reshape
+    # of the model-sharded H axis breaks GSPMD sharding when Kh < mesh
+    # (score all-gathers); repeated kv stays local per head shard.
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    kb = k.reshape(B, nk, k_block, H, D)
+    vb = v.reshape(B, nk, k_block, H, D)
+
+    def one_q_block(qi):
+        qblk = jax.lax.dynamic_slice_in_dim(q, qi * q_block, q_block, axis=1)
+        # contract in the input dtype with f32 accumulation (MXU-native);
+        # f32 upcasts double HBM + collective traffic for no accuracy the
+        # f32 softmax below doesn't already provide
+        qblk = (qblk.astype(jnp.float32) * scale).astype(q.dtype)
+        qpos = qi * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kj, vj, kidx = inp
+            kpos = kidx * k_block + jnp.arange(k_block)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kj,
+                           preferred_element_type=jnp.float32)
+            s = _softcap(s, softcap)
+            mask = kpos[None, :] < Sk_orig
+            mask = jnp.broadcast_to(mask, (q_block, k_block))
+            if causal:
+                mask = mask & (qpos[:, None] >= kpos[None, :])
+            if window:
+                mask = mask & (qpos[:, None] - kpos[None, :] < window)
+            s = jnp.where(mask[None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows (m_new == -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(vj.dtype), vj,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, q_block), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, q_block), jnp.float32)
+        a0 = jnp.zeros((B, H, q_block, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (B, H, q_block, D) -> (B, q_block, H, D)
+        return jnp.moveaxis(out, 2, 1).astype(q.dtype)
+
+    blocks = jax.lax.map(one_q_block, jnp.arange(nq))   # (nq, B, qb, H, D)
+    out = jnp.moveaxis(blocks, 0, 1).reshape(B, Sq, H, D)
+    return out[:, :Sq_orig]
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     kv_len: jnp.ndarray, *, softcap: float = 0.0,
+                     window: int = 0, cache_offset: int = 0,
+                     kv_start: Optional[jnp.ndarray] = None,
+                     combine_axis: Optional[str] = None) -> jnp.ndarray:
+    """Single-token ragged decode attention.
+
+    q: (B, H, D); k/v_cache: (B, S, Kh, D); kv_len: (B,) valid lengths.
+    ``kv_start``: (B,) first valid cache index (left-padded prefills).
+    ``cache_offset``: global position of cache slot 0 (context-parallel
+    shards pass their shard offset).  ``combine_axis``: mesh axis name for
+    distributed flash-decode (partial max/sum combined via lax.p* ops —
+    callers must be inside shard_map for that mode).
+    """
+    B, H, D = q.shape
+    S, Kh = k_cache.shape[1], k_cache.shape[2]
+    G = H // Kh
+    # contract in the cache dtype with f32 accumulation (MXU-native
+    # bf16 x bf16 -> f32); casting the cache to f32 would materialise a
+    # full converted copy every step (2x the decode HBM traffic).
+    qf = (q / math.sqrt(D)).astype(k_cache.dtype).reshape(B, Kh, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache,
+                   preferred_element_type=jnp.float32)
+    s = _softcap(s, softcap)
+    pos = cache_offset + jnp.arange(S)
+    valid = pos[None, :] < kv_len[:, None]
+    if kv_start is not None:
+        valid &= pos[None, :] >= kv_start[:, None]
+    if window:
+        valid &= pos[None, :] >= (kv_len[:, None] - window)
+    s = jnp.where(valid[:, None, None], s, -jnp.inf)
+    m = jnp.max(s, axis=-1)                          # (B, Kh, G)
+    if combine_axis is not None:
+        m = jax.lax.pmax(m, combine_axis)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_safe[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    if combine_axis is not None:
+        l = jax.lax.psum(l, combine_axis)
+        acc = jax.lax.psum(acc, combine_axis)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention module (projections + variants)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, dtype) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, Kh = cfg.num_heads, cfg.num_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    sd = 1.0 / math.sqrt(d)
+    p: Params = {
+        "wq": (jax.random.normal(k1, (d, H, hd)) * sd).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, Kh, hd)) * sd).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, Kh, hd)) * sd).astype(dtype),
+        "wo": (jax.random.normal(k4, (H, hd, d)) * sd / math.sqrt(2 * cfg.num_layers)).astype(dtype),
+    }
+    if cfg.attn.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((Kh, hd), dtype)
+        p["bv"] = jnp.zeros((Kh, hd), dtype)
+    if cfg.attn.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def qkv_project(p: Params, cfg, x: jnp.ndarray, positions: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> q (B,S,H,D), k/v (B,S,Kh,D); applies bias/qk-norm/rope."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if "q_norm" in p:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, positions, cfg.attn.rope_theta)
+        k = apply_rope(k, positions, cfg.attn.rope_theta)
+    # "seq_attn" (not "seq"): under sequence parallelism the residual
+    # stream is seq-sharded but attention wants full sequences per head
+    q = logical_constraint(q, ("batch", "seq_attn", "heads", "head_dim"))
+    k = logical_constraint(k, ("batch", "seq_attn", "kv_heads", "head_dim"))
+    v = logical_constraint(v, ("batch", "seq_attn", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+def attn_output(p: Params, o: jnp.ndarray) -> jnp.ndarray:
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return logical_constraint(out, ("batch", "seq", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, gated: bool, num_layers: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    sd_in, sd_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(d_ff * 2 * num_layers)
+    p = {
+        "w_in": (jax.random.normal(k1, (d, d_ff)) * sd_in).astype(dtype),
+        "w_out": (jax.random.normal(k2, (d_ff, d)) * sd_out).astype(dtype),
+    }
+    if gated:
+        p["w_gate"] = (jax.random.normal(k3, (d, d_ff)) * sd_in).astype(dtype)
+    return p
+
+
+def mlp(p: Params, x: jnp.ndarray, act: str, gated: bool) -> jnp.ndarray:
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"])
+    h = logical_constraint(h, ("batch", "seq_attn", "ffn"))
+    if act == "silu":
+        a = jax.nn.silu(h)
+    elif act == "relu2":
+        a = jnp.square(jax.nn.relu(h))
+    elif act == "gelu":
+        a = jax.nn.gelu(h)
+    else:
+        raise ValueError(act)
+    if gated:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        a = a * g
+    out = jnp.einsum("bsf,fd->bsd", a, p["w_out"])
+    return logical_constraint(out, ("batch", "seq", "embed"))

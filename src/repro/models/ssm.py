@@ -1,0 +1,279 @@
+"""Mamba2 (SSD) blocks: chunked state-space dual form for training/prefill
+(lax.scan over chunks — O(chunk^2) intra-chunk compute, states materialised
+only at chunk boundaries, TPU/VMEM-friendly) and O(1) recurrent decode.
+
+Shapes follow the Mamba2 minimal formulation:
+  x       : (B, T, H, P)    SSM-head inputs (P = head channels)
+  dt      : (B, T, H)       discretisation step (softplus + bias)
+  A       : (H,)            negative decay rate;  a_log = dt * A
+  B_, C_  : (B, T, G, N)    input/output projections (G groups, GQA-style)
+  state   : (B, H, N, P)
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical_constraint
+from repro.models import layers as L
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Core SSD scan
+# ---------------------------------------------------------------------------
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a: (..., T) -> (..., T, T) with out[t, s] = sum_{s < r <= t} a_r
+    (lower-triangular cumulative segment sums; -inf above diagonal)."""
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]        # sum_{s<r<=t}
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, a_log: jnp.ndarray, B_: jnp.ndarray,
+                C_: jnp.ndarray, chunk: int,
+                init_state: Optional[jnp.ndarray] = None,
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,T,H,P), final_state (B,H,N,P)).
+
+    Scans over T//chunk chunks; each chunk does the quadratic intra-chunk
+    contribution plus the inter-chunk state recurrence.
+    """
+    Bsz, T, H, Pdim = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    T_orig = T
+    if T % chunk:
+        # pad the tail with x=0, a_log=0 (decay 1): state passes through
+        pad = chunk - T % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        T = T + pad
+    nc = T // chunk
+    rep = H // G
+    f32 = jnp.float32
+
+    xc = x.reshape(Bsz, nc, chunk, H, Pdim).astype(f32)
+    ac = a_log.reshape(Bsz, nc, chunk, H).astype(f32)
+    Bc = B_.reshape(Bsz, nc, chunk, G, N).astype(f32)
+    Cc = C_.reshape(Bsz, nc, chunk, G, N).astype(f32)
+
+    s0 = (jnp.zeros((Bsz, H, N, Pdim), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def chunk_step(state, inp):
+        xk, ak, Bk, Ck = inp          # (B, chunk, ...)
+        cs = jnp.cumsum(ak, axis=1)                       # (B, c, H)
+        total = cs[:, -1]                                 # (B, H)
+        # intra-chunk: Lmat[t,s] = exp(sum_{s<r<=t} a_r), causal
+        Lmat = jnp.exp(_segsum(jnp.moveaxis(ak, 1, 2)))   # (B, H, c, c)
+        CB = jnp.einsum("btgn,bsgn->bgts", Ck, Bk)        # (B, G, c, c)
+        CB = jnp.repeat(CB, rep, axis=1)                  # (B, H, c, c)
+        M = CB * Lmat
+        y_diag = jnp.einsum("bhts,bshp->bthp", M, xk)
+        # inter-chunk: contribution of incoming state
+        decay_out = jnp.exp(cs)                           # (B, c, H)
+        Ch = jnp.repeat(Ck, rep, axis=2)                  # (B, c, H, N)
+        y_off = jnp.einsum("bthn,bhnp->bthp", Ch, state) * decay_out[..., None]
+        # state update: S' = S * exp(total) + sum_s B_s x_s exp(total - cs_s)
+        decay_in = jnp.exp(total[:, None] - cs)           # (B, c, H)
+        Bh = jnp.repeat(Bk, rep, axis=2)                  # (B, c, H, N)
+        s_add = jnp.einsum("bshn,bsh,bshp->bhnp", Bh, decay_in, xk)
+        state = state * jnp.exp(total)[..., None, None] + s_add
+        return state, y_diag + y_off
+
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(ac, 1, 0),
+          jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0))
+    final, ys = jax.lax.scan(chunk_step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, T, H, Pdim)[:, :T_orig]
+    return y.astype(x.dtype), final
+
+
+def ssd_ref(x, a_log, B_, C_, init_state=None):
+    """Sequential oracle: plain recurrence h_t = exp(a_t) h_{t-1} + B_t x_t."""
+    Bsz, T, H, Pdim = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    f32 = jnp.float32
+    h = (jnp.zeros((Bsz, H, N, Pdim), f32) if init_state is None
+         else init_state.astype(f32))
+    ys = []
+    for t in range(T):
+        a = jnp.exp(a_log[:, t].astype(f32))                       # (B, H)
+        Bt = jnp.repeat(B_[:, t].astype(f32), rep, axis=1)         # (B, H, N)
+        Ct = jnp.repeat(C_[:, t].astype(f32), rep, axis=1)
+        h = h * a[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", Bt, x[:, t].astype(f32))
+        ys.append(jnp.einsum("bhn,bhnp->bhp", Ct, h))
+    return jnp.stack(ys, axis=1).astype(x.dtype), h
+
+
+def ssd_decode(x1, a_log1, B1, C1, state):
+    """One-step recurrence.  x1: (B, H, P); a_log1: (B, H); B1/C1: (B, G, N);
+    state: (B, H, N, P) -> (y (B, H, P), new state)."""
+    H = x1.shape[1]
+    G = B1.shape[1]
+    rep = H // G
+    f32 = jnp.float32
+    a = jnp.exp(a_log1.astype(f32))
+    Bh = jnp.repeat(B1.astype(f32), rep, axis=1)
+    Ch = jnp.repeat(C1.astype(f32), rep, axis=1)
+    state = state * a[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", Bh, x1.astype(f32))
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state)
+    return y.astype(x1.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (in_proj -> conv -> SSD -> gate -> norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = s.num_heads or d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.ngroups * s.state_dim
+    return d_inner, nheads, conv_dim
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype) -> Params:
+    """Projection weights are kept per-segment (z / x / BC / dt) rather
+    than one concatenated in_proj so each can carry its own sharding:
+    z, x, dt shard over `model` (heads/d_inner); BC is tiny and replicated."""
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, nheads, conv_dim = mamba2_dims(cfg)
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    gN = 2 * s.ngroups * s.state_dim
+    sd = 1.0 / math.sqrt(d)
+    return {
+        "in_z": (jax.random.normal(k1, (d, d_inner)) * sd).astype(dtype),
+        "in_x": (jax.random.normal(k2, (d, d_inner)) * sd).astype(dtype),
+        "in_bc": (jax.random.normal(k4, (d, gN)) * sd).astype(dtype),
+        "in_dt": (jax.random.normal(k5, (d, nheads)) * sd).astype(dtype),
+        "conv_x_w": (jax.random.normal(k6, (s.conv_width, d_inner))
+                     * (1.0 / math.sqrt(s.conv_width))).astype(dtype),
+        "conv_x_b": jnp.zeros((d_inner,), dtype),
+        "conv_bc_w": (jax.random.normal(k6, (s.conv_width, gN))
+                      * (1.0 / math.sqrt(s.conv_width))).astype(dtype),
+        "conv_bc_b": jnp.zeros((gN,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "gate_norm": jnp.ones((d_inner,), dtype),
+        "out_proj": (jax.random.normal(k3, (d_inner, d))
+                     * (1.0 / math.sqrt(d_inner * 2 * cfg.num_layers))
+                     ).astype(dtype),
+    }
+
+
+def _causal_conv(xconv: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 init: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv.  xconv: (B, T, Cd); w: (K, Cd)."""
+    K = w.shape[0]
+    if init is None:
+        pad = jnp.zeros((xconv.shape[0], K - 1, xconv.shape[2]), xconv.dtype)
+    else:
+        pad = init.astype(xconv.dtype)
+    xp = jnp.concatenate([pad, xconv], axis=1)
+    out = sum(xp[:, i:i + xconv.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def mamba2_forward(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                   init_state=None, conv_init=None,
+                   return_state: bool = False):
+    """x: (B, T, d) -> (B, T, d) [, (ssm_state, conv_state)]."""
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = mamba2_dims(cfg)
+    gN = s.ngroups * s.state_dim
+    Bsz, T, _ = x.shape
+    z = jnp.einsum("btd,de->bte", x, p["in_z"])
+    xi = jnp.einsum("btd,de->bte", x, p["in_x"])
+    bc = jnp.einsum("btd,de->bte", x, p["in_bc"])
+    dt = jnp.einsum("btd,de->bte", x, p["in_dt"])
+    ci_x = conv_init[0] if conv_init is not None else None
+    ci_bc = conv_init[1] if conv_init is not None else None
+    xs = _causal_conv(xi, p["conv_x_w"], p["conv_x_b"], ci_x)
+    bc_out = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"], ci_bc)
+    B_, C_ = jnp.split(bc_out, 2, axis=-1)
+    xs = xs.reshape(Bsz, T, nheads, s.head_dim)
+    xs = logical_constraint(xs, ("batch", "seq_attn", "ssm_heads", None))
+    B_ = B_.reshape(Bsz, T, s.ngroups, s.state_dim)
+    C_ = C_.reshape(Bsz, T, s.ngroups, s.state_dim)
+    dt_s = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    A = -jnp.exp(p["A_log"])                                       # (H,)
+    a_log = dt_s * A
+    x_in = xs.astype(jnp.float32) * dt_s[..., None]
+    chunk = min(s.chunk_size, T)
+    y, final = ssd_chunked(x_in.astype(x.dtype), a_log, B_, C_, chunk,
+                           init_state)
+    y = y.astype(jnp.float32) + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, T, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = L.rmsnorm(y.astype(x.dtype), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+    out = logical_constraint(out, ("batch", "seq", "embed"))
+    if return_state:
+        # conv state: last K-1 pre-activation conv inputs per segment
+        K = p["conv_x_w"].shape[0]
+
+        def tail(seq, prev, dim):
+            if T >= K - 1:
+                return seq[:, T - (K - 1):]
+            pad = jnp.zeros((Bsz, K - 1 - T, dim), seq.dtype)
+            prev = prev if prev is not None else pad
+            return jnp.concatenate([prev, seq], axis=1)[:, -(K - 1):]
+
+        conv_state = (tail(xi, ci_x, d_inner), tail(bc, ci_bc, gN))
+        return out, (final, conv_state)
+    return out
+
+
+def mamba2_decode(p: Params, cfg: ModelConfig, x1: jnp.ndarray,
+                  ssm_state: jnp.ndarray, conv_state: jnp.ndarray):
+    """x1: (B, d) one token.  conv_state: (B, K-1, conv_dim)."""
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = mamba2_dims(cfg)
+    gN = s.ngroups * s.state_dim
+    Bsz = x1.shape[0]
+    z = jnp.einsum("bd,de->be", x1, p["in_z"])
+    xi = jnp.einsum("bd,de->be", x1, p["in_x"])
+    bc = jnp.einsum("bd,de->be", x1, p["in_bc"])
+    dt = jnp.einsum("bd,de->be", x1, p["in_dt"])
+    conv_x_state, conv_bc_state = conv_state
+
+    def conv1(win_prev, new, w, b):
+        win = jnp.concatenate([win_prev, new[:, None]], axis=1)
+        out = jax.nn.silu(jnp.einsum("bkc,kc->bc", win.astype(jnp.float32),
+                                     w.astype(jnp.float32))
+                          + b.astype(jnp.float32)).astype(x1.dtype)
+        return out, win[:, 1:]
+
+    xs, conv_x_state = conv1(conv_x_state, xi, p["conv_x_w"], p["conv_x_b"])
+    bc_out, conv_bc_state = conv1(conv_bc_state, bc, p["conv_bc_w"],
+                                  p["conv_bc_b"])
+    B_, C_ = jnp.split(bc_out, 2, axis=-1)
+    xs = xs.reshape(Bsz, nheads, s.head_dim)
+    B_ = B_.reshape(Bsz, s.ngroups, s.state_dim)
+    C_ = C_.reshape(Bsz, s.ngroups, s.state_dim)
+    dt_s = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    a_log1 = dt_s * A
+    x_in = xs.astype(jnp.float32) * dt_s[..., None]
+    y, ssm_state = ssd_decode(x_in.astype(x1.dtype), a_log1, B_, C_, ssm_state)
+    y = y.astype(jnp.float32) + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(Bsz, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = L.rmsnorm(y.astype(x1.dtype), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])
+    return out, ssm_state, (conv_x_state, conv_bc_state)

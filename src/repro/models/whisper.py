@@ -1,0 +1,218 @@
+"""Whisper-style encoder-decoder backbone [arXiv:2212.04356].
+
+Per the assignment carve-out, the mel-spectrogram + conv feature frontend is
+a STUB: ``input_specs`` feeds precomputed frame embeddings (B, T_enc, d)
+directly into the encoder.  The transformer itself (bidirectional encoder,
+causal decoder with cross-attention, learned decoder positions, LayerNorm,
+GELU MLPs) is implemented fully.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as TF
+
+Params = Dict[str, Any]
+
+
+def _init_xattn(key, cfg, dtype):
+    return L.init_attention(key, cfg, dtype)
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dtype = cfg.param_dtype
+    n_enc, n_dec = cfg.encoder_layers, cfg.num_layers
+    keys = jax.random.split(key, n_enc + n_dec + 6)
+    enc_blocks = [TF.init_block(keys[i], cfg, dtype) for i in range(n_enc)]
+    dec_blocks = []
+    for i in range(n_dec):
+        k1, k2, k3 = jax.random.split(keys[n_enc + i], 3)
+        b = TF.init_block(k1, cfg, dtype)
+        b["xattn"] = _init_xattn(k2, cfg, dtype)
+        b["ln_x"] = L.init_norm(k3, cfg.d_model, cfg.norm_type, dtype)
+        dec_blocks.append(b)
+    return {
+        "embed": (jax.random.normal(keys[-1], (cfg.vocab_size, cfg.d_model))
+                  * (1.0 / math.sqrt(cfg.d_model))).astype(dtype),
+        "pos_embed": (jax.random.normal(keys[-2], (cfg.max_position,
+                                                   cfg.d_model)) * 0.02
+                      ).astype(dtype),
+        "enc_layers": TF._stack(enc_blocks),
+        "dec_layers": TF._stack(dec_blocks),
+        "enc_norm": L.init_norm(keys[-3], cfg.d_model, cfg.norm_type, dtype),
+        "final_norm": L.init_norm(keys[-4], cfg.d_model, cfg.norm_type, dtype),
+        "lm_head": (jax.random.normal(keys[-5], (cfg.d_model, cfg.vocab_size))
+                    * (1.0 / math.sqrt(cfg.d_model))).astype(dtype),
+    }
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, T_enc, d) stub frame embeddings -> encoder states."""
+    B, T, _ = frames.shape
+    x = frames.astype(cfg.compute_dtype)
+    x = x + L.sinusoidal_embedding(T, cfg.d_model).astype(x.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+    def body(h, bp):
+        hn = L.norm(h, bp["ln1"], cfg.norm_type, cfg.norm_eps)
+        q, k, v = L.qkv_project(bp["attn"], cfg, hn, positions)
+        o = L.full_attention(q, k, v, causal=False) if T <= TF.FULL_ATTN_MAX_SEQ \
+            else L.blockwise_attention(q, k, v, causal=False)
+        h = h + L.attn_output(bp["attn"], o)
+        hn = L.norm(h, bp["ln2"], cfg.norm_type, cfg.norm_eps)
+        h = h + L.mlp(bp["mlp"], hn, cfg.mlp_act, cfg.gated_mlp)
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.norm(x, params["enc_norm"], cfg.norm_type, cfg.norm_eps)
+
+
+def _dec_block(bp, cfg, h, positions, enc_kv, causal_full: bool):
+    """enc_kv: (k_enc, v_enc) precomputed (B, T_enc, Kh, D)."""
+    hn = L.norm(h, bp["ln1"], cfg.norm_type, cfg.norm_eps)
+    q, k, v = L.qkv_project(bp["attn"], cfg, hn, positions)
+    S = q.shape[1]
+    o = L.full_attention(q, k, v, causal=True) if S <= TF.FULL_ATTN_MAX_SEQ \
+        else L.blockwise_attention(q, k, v, causal=True)
+    h = h + L.attn_output(bp["attn"], o)
+    # cross attention
+    hn = L.norm(h, bp["ln_x"], cfg.norm_type, cfg.norm_eps)
+    qx = jnp.einsum("bsd,dhk->bshk", hn, bp["xattn"]["wq"])
+    k_enc, v_enc = enc_kv
+    ox = L.full_attention(qx, k_enc, v_enc, causal=False)
+    h = h + L.attn_output(bp["xattn"], ox)
+    hn = L.norm(h, bp["ln2"], cfg.norm_type, cfg.norm_eps)
+    h = h + L.mlp(bp["mlp"], hn, cfg.mlp_act, cfg.gated_mlp)
+    return h
+
+
+def cross_kv(params: Params, cfg: ModelConfig, enc_states: jnp.ndarray):
+    """Precompute per-decoder-layer cross-attention K/V from encoder states.
+    Returns (k_x, v_x): (n_dec, B, T_enc, Kh, D)."""
+    def body(_, bp):
+        k = jnp.einsum("bsd,dhk->bshk", enc_states, bp["xattn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_states, bp["xattn"]["wv"])
+        return None, (k, v)
+    _, (k_x, v_x) = jax.lax.scan(body, None, params["dec_layers"])
+    return k_x, v_x
+
+
+def decoder_forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                    enc_states: jnp.ndarray) -> jnp.ndarray:
+    """Teacher-forced decoder pass (training): tokens (B, S)."""
+    B, S = tokens.shape
+    x = TF.embed_tokens(params, cfg, tokens)
+    x = x + params["pos_embed"][:S][None].astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    k_x, v_x = cross_kv(params, cfg, enc_states)
+
+    def body(h, xs):
+        bp, kx, vx = xs
+        return _dec_block(bp, cfg, h, positions, (kx, vx), True), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, (params["dec_layers"], k_x, v_x))
+    return TF.lm_logits(params, cfg, x)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            frames: jnp.ndarray) -> jnp.ndarray:
+    return decoder_forward(params, cfg, tokens, encode(params, cfg, frames))
+
+
+# ---------------------------------------------------------------------------
+# Decode: self-attn cache + precomputed cross K/V
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None
+               ) -> Dict[str, jnp.ndarray]:
+    dtype = dtype or cfg.compute_dtype
+    Kh, D = cfg.num_kv_heads, cfg.resolved_head_dim
+    n_dec, T_enc = cfg.num_layers, cfg.encoder_positions
+    return {
+        "k": jnp.zeros((n_dec, batch, max_len, Kh, D), dtype),
+        "v": jnp.zeros((n_dec, batch, max_len, Kh, D), dtype),
+        "k_x": jnp.zeros((n_dec, batch, T_enc, Kh, D), dtype),
+        "v_x": jnp.zeros((n_dec, batch, T_enc, Kh, D), dtype),
+    }
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            cache: Dict[str, jnp.ndarray], prompt_lens: jnp.ndarray,
+            frames: Optional[jnp.ndarray] = None,
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Encodes frames (filling cross K/V) and prefises decoder prompts."""
+    if frames is not None:
+        enc_states = encode(params, cfg, frames)
+        k_x, v_x = cross_kv(params, cfg, enc_states)
+        cache = dict(cache, k_x=k_x.astype(cache["k_x"].dtype),
+                     v_x=v_x.astype(cache["v_x"].dtype))
+    B, S = tokens.shape
+    x = TF.embed_tokens(params, cfg, tokens)
+    x = x + params["pos_embed"][:S][None].astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(h, xs):
+        bp, kx, vx, kc, vc = xs
+        hn = L.norm(h, bp["ln1"], cfg.norm_type, cfg.norm_eps)
+        q, k, v = L.qkv_project(bp["attn"], cfg, hn, positions)
+        o = L.full_attention(q, k, v, causal=True) if S <= TF.FULL_ATTN_MAX_SEQ \
+            else L.blockwise_attention(q, k, v, causal=True)
+        h = h + L.attn_output(bp["attn"], o)
+        hn = L.norm(h, bp["ln_x"], cfg.norm_type, cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", hn, bp["xattn"]["wq"])
+        ox = L.full_attention(qx, kx, vx, causal=False)
+        h = h + L.attn_output(bp["xattn"], ox)
+        hn = L.norm(h, bp["ln2"], cfg.norm_type, cfg.norm_eps)
+        h = h + L.mlp(bp["mlp"], hn, cfg.mlp_act, cfg.gated_mlp)
+        kc = kc.at[:, :S].set(k.astype(kc.dtype))
+        vc = vc.at[:, :S].set(v.astype(vc.dtype))
+        return h, (kc, vc)
+
+    x, (kc, vc) = jax.lax.scan(body, x, (params["dec_layers"], cache["k_x"],
+                                         cache["v_x"], cache["k"],
+                                         cache["v"]))
+    cache = dict(cache, k=kc, v=vc)
+    return TF.lm_logits(params, cfg, x), cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
+                cache: Dict[str, jnp.ndarray], kv_len: jnp.ndarray,
+                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    x = TF.embed_tokens(params, cfg, token[:, None])
+    x = x + params["pos_embed"][kv_len][:, None].astype(x.dtype)
+
+    def body(h, xs):
+        bp, kx, vx, kc, vc = xs
+        hn = L.norm(h, bp["ln1"], cfg.norm_type, cfg.norm_eps)
+        q, k, v = L.qkv_project(bp["attn"], cfg, hn, kv_len[:, None])
+        kc = TF._write_token(kc[None], k[None, :, 0], kv_len)[0]
+        vc = TF._write_token(vc[None], v[None, :, 0], kv_len)[0]
+        o = L.decode_attention(q[:, 0], kc, vc, kv_len + 1)
+        h = h + L.attn_output(bp["attn"], o[:, None])
+        hn = L.norm(h, bp["ln_x"], cfg.norm_type, cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", hn, bp["xattn"]["wq"])
+        T_enc = kx.shape[1]
+        ox = L.decode_attention(qx[:, 0], kx, vx,
+                                jnp.full_like(kv_len, T_enc))
+        h = h + L.attn_output(bp["xattn"], ox[:, None])
+        hn = L.norm(h, bp["ln2"], cfg.norm_type, cfg.norm_eps)
+        h = h + L.mlp(bp["mlp"], hn, cfg.mlp_act, cfg.gated_mlp)
+        return h, (k[:, 0], v[:, 0])
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k_x"], cache["v_x"],
+                  cache["k"], cache["v"]))
+    cache = dict(cache,
+                 k=TF._write_token(cache["k"], k_new, kv_len),
+                 v=TF._write_token(cache["v"], v_new, kv_len))
+    return TF.lm_logits(params, cfg, x[:, 0]), cache

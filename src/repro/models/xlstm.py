@@ -1,0 +1,413 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, chunkwise-parallel
+like linear attention with exponential gating) and sLSTM (scalar memory,
+true recurrence with state mixing, lax.scan over time).
+
+mLSTM state: (C (B,H,Dk,Dv), n (B,H,Dk)); sLSTM state: (c, n, h, m) each
+(B, H, Dh).  Decode is O(1) per token for both — xLSTM archs therefore
+support the 500k long-context decode shape natively.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Params = Dict[str, jnp.ndarray]
+
+GATE_CLIP = 8.0   # clip pre-activation of exp input gate for f32 stability
+
+
+# ---------------------------------------------------------------------------
+# mLSTM core
+# ---------------------------------------------------------------------------
+
+def mlstm_chunked(q, k, v, i_pre, f_pre, chunk: int,
+                  init_state: Optional[Tuple] = None):
+    """q,k,v: (B,T,H,D); i_pre,f_pre: (B,T,H) gate pre-activations.
+    Returns (h (B,T,H,D), (C, n) final state)."""
+    B, T, H, D = q.shape
+    f32 = jnp.float32
+    assert T % chunk == 0
+    nc = T // chunk
+    qf = q.astype(f32) / math.sqrt(D)
+    kf, vf = k.astype(f32), v.astype(f32)
+    log_f = jax.nn.log_sigmoid(f_pre.astype(f32))            # <= 0
+    log_i = jnp.clip(i_pre.astype(f32), -GATE_CLIP, GATE_CLIP)
+
+    qc = qf.reshape(B, nc, chunk, H, D)
+    kc = kf.reshape(B, nc, chunk, H, D)
+    vc = vf.reshape(B, nc, chunk, H, D)
+    lfc = log_f.reshape(B, nc, chunk, H)
+    lic = log_i.reshape(B, nc, chunk, H)
+
+    if init_state is None:
+        C0 = jnp.zeros((B, H, D, D), f32)
+        n0 = jnp.zeros((B, H, D), f32)
+    else:
+        C0, n0 = (s.astype(f32) for s in init_state)
+
+    def step(carry, inp):
+        C, n = carry
+        qk_, kk_, vk_, lf, li = inp                  # (B, chunk, ...)
+        cs = jnp.cumsum(lf, axis=1)                  # (B, c, H)
+        total = cs[:, -1]                            # (B, H)
+        # intra-chunk: w[t,s] = exp(cs_t - cs_s + li_s), s <= t
+        wlog = (cs[:, :, None] - cs[:, None, :]
+                + li[:, None, :])                    # (B, t, s, H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = jnp.where(mask[None, :, :, None], jnp.exp(wlog), 0.0)
+        scores = jnp.einsum("bthd,bshd->btsh", qk_, kk_) * w
+        y_intra = jnp.einsum("btsh,bshd->bthd", scores, vk_)
+        den_intra = jnp.sum(scores, axis=2)          # (B, c, H)
+        # inter-chunk
+        dec = jnp.exp(cs)                            # (B, c, H)
+        y_off = jnp.einsum("bthd,bhde->bthe", qk_, C) * dec[..., None]
+        den_off = jnp.einsum("bthd,bhd->bth", qk_, n) * dec
+        den = jnp.maximum(jnp.abs(den_intra + den_off), 1.0)
+        h = (y_intra + y_off) / den[..., None]
+        # state update
+        din = jnp.exp(total[:, None] + li - cs)      # (B, c, H)
+        C = C * jnp.exp(total)[..., None, None] + jnp.einsum(
+            "bshd,bsh,bshe->bhde", kk_, din, vk_)
+        n = n * jnp.exp(total)[..., None] + jnp.einsum(
+            "bshd,bsh->bhd", kk_, din)
+        return (C, n), h
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (qc, kc, vc, lfc, lic))
+    (C, n), hs = jax.lax.scan(step, (C0, n0), xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, T, H, D)
+    return h.astype(q.dtype), (C, n)
+
+
+def mlstm_ref(q, k, v, i_pre, f_pre, init_state=None):
+    """Sequential oracle."""
+    B, T, H, D = q.shape
+    f32 = jnp.float32
+    qf = q.astype(f32) / math.sqrt(D)
+    log_f = jax.nn.log_sigmoid(f_pre.astype(f32))
+    log_i = jnp.clip(i_pre.astype(f32), -GATE_CLIP, GATE_CLIP)
+    if init_state is None:
+        C = jnp.zeros((B, H, D, D), f32)
+        n = jnp.zeros((B, H, D), f32)
+    else:
+        C, n = (s.astype(f32) for s in init_state)
+    hs = []
+    for t in range(T):
+        f = jnp.exp(log_f[:, t])[..., None]
+        i = jnp.exp(log_i[:, t])[..., None]
+        C = C * f[..., None] + i[..., None] * jnp.einsum(
+            "bhd,bhe->bhde", k[:, t].astype(f32), v[:, t].astype(f32))
+        n = n * f + i * k[:, t].astype(f32)
+        num = jnp.einsum("bhd,bhde->bhe", qf[:, t], C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf[:, t], n)), 1.0)
+        hs.append(num / den[..., None])
+    return jnp.stack(hs, 1).astype(q.dtype), (C, n)
+
+
+def mlstm_decode(q1, k1, v1, i1, f1, state):
+    """One token: q1..v1 (B,H,D); i1,f1 (B,H)."""
+    C, n = state
+    f32 = jnp.float32
+    D = q1.shape[-1]
+    f = jnp.exp(jax.nn.log_sigmoid(f1.astype(f32)))[..., None]
+    i = jnp.exp(jnp.clip(i1.astype(f32), -GATE_CLIP, GATE_CLIP))[..., None]
+    C = C * f[..., None] + i[..., None] * jnp.einsum(
+        "bhd,bhe->bhde", k1.astype(f32), v1.astype(f32))
+    n = n * f + i * k1.astype(f32)
+    qf = q1.astype(f32) / math.sqrt(D)
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), 1.0)
+    return (num / den[..., None]).astype(q1.dtype), (C, n)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM core (inherently sequential)
+# ---------------------------------------------------------------------------
+
+def slstm_scan(x_gates, R, state):
+    """x_gates: (B, T, 4, H, Dh) input contributions for (i, f, z, o);
+    R: (4, H, Dh, Dh) recurrent mixing; state: (c, n, h, m) each (B,H,Dh).
+    Returns (h_seq (B,T,H,Dh), new state)."""
+    f32 = jnp.float32
+
+    def step(carry, xg):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhd,ghde->bghe", h, R.astype(f32))  # (B,4,H,Dh)
+        g = xg.astype(f32) + rec
+        it, ft, zt, ot = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+        m_new = jnp.maximum(ft + m, it)
+        i_p = jnp.exp(jnp.minimum(it - m_new, 0.0))
+        f_p = jnp.exp(jnp.minimum(ft + m - m_new, 0.0))
+        c = f_p * c + i_p * jnp.tanh(zt)
+        n = f_p * n + i_p
+        h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    (c, n, h, m), hs = jax.lax.scan(step, state,
+                                    jnp.moveaxis(x_gates, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), (c, n, h, m)
+
+
+def slstm_init_state(B, H, Dh):
+    z = jnp.zeros((B, H, Dh), jnp.float32)
+    return (z, z, z, jnp.full((B, H, Dh), -1e9, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def init_mlstm_block(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    H = cfg.num_heads
+    d_inner = 2 * d
+    Dh = d_inner // H
+    ks = jax.random.split(key, 8)
+    sd = 1.0 / math.sqrt(d)
+    sdi = 1.0 / math.sqrt(d_inner)
+    return {
+        "ln": L.init_norm(ks[0], d, "layernorm", dtype),
+        "up": (jax.random.normal(ks[1], (d, 2 * d_inner)) * sd).astype(dtype),
+        "conv_w": (jax.random.normal(ks[2], (4, d_inner)) * 0.5).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "wq": (jax.random.normal(ks[3], (d_inner, H, Dh)) * sdi).astype(dtype),
+        "wk": (jax.random.normal(ks[4], (d_inner, H, Dh)) * sdi).astype(dtype),
+        "wv": (jax.random.normal(ks[5], (d_inner, H, Dh)) * sdi).astype(dtype),
+        "w_if": (jax.random.normal(ks[6], (d_inner, 2, H)) * sdi).astype(dtype),
+        "b_if": jnp.concatenate([jnp.zeros((1, H)),
+                                 jnp.ones((1, H)) * 3.0]).astype(jnp.float32),
+        "out_norm": jnp.ones((H, Dh), dtype),
+        "down": (jax.random.normal(ks[7], (d_inner, d))
+                 * (1.0 / math.sqrt(d_inner * 2 * cfg.num_layers))).astype(dtype),
+    }
+
+
+def mlstm_block(p: Params, cfg: ModelConfig, x, state=None, conv_state=None,
+                return_state: bool = False):
+    """x: (B, T, d).  state: (C, n); conv_state: (B, 3, d_inner)."""
+    B, T, d = x.shape
+    H = cfg.num_heads
+    d_inner = 2 * d
+    Dh = d_inner // H
+    h = L.layernorm(x, p["ln"]["scale"], p["ln"]["bias"])
+    up = jnp.einsum("btd,de->bte", h, p["up"])
+    xi, z = jnp.split(up, 2, axis=-1)
+    from repro.models.ssm import _causal_conv
+    xc = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+    q = jnp.einsum("bte,ehd->bthd", xc, p["wq"])
+    k = jnp.einsum("bte,ehd->bthd", xc, p["wk"])
+    v = jnp.einsum("bte,ehd->bthd", xi, p["wv"])
+    gif = jnp.einsum("bte,egh->btgh", xc, p["w_if"]).astype(jnp.float32) \
+        + p["b_if"]
+    i_pre, f_pre = gif[:, :, 0], gif[:, :, 1]
+    chunk = min(128, T)
+    if T % chunk:
+        chunk = T
+    hseq, new_state = mlstm_chunked(q, k, v, i_pre, f_pre, chunk, state)
+    hseq = L.rmsnorm(hseq, p["out_norm"])           # per-head norm
+    hflat = hseq.reshape(B, T, d_inner)
+    out = jnp.einsum("bte,ed->btd", hflat * jax.nn.silu(z), p["down"])
+    if return_state:
+        K = p["conv_w"].shape[0]
+        if T >= K - 1:
+            cs = xi[:, T - (K - 1):]
+        else:
+            prev = conv_state if conv_state is not None else jnp.zeros(
+                (B, K - 1, d_inner), xi.dtype)
+            cs = jnp.concatenate([prev, xi], axis=1)[:, -(K - 1):]
+        return x + out, (new_state, cs)
+    return x + out
+
+
+def mlstm_block_decode(p: Params, cfg: ModelConfig, x1, state, conv_state):
+    """x1: (B, d)."""
+    B, d = x1.shape
+    H = cfg.num_heads
+    d_inner = 2 * d
+    h = L.layernorm(x1, p["ln"]["scale"], p["ln"]["bias"])
+    up = jnp.einsum("bd,de->be", h, p["up"])
+    xi, z = jnp.split(up, 2, axis=-1)
+    win = jnp.concatenate([conv_state, xi[:, None]], axis=1)
+    xc = jax.nn.silu(jnp.einsum("bkc,kc->bc", win.astype(jnp.float32),
+                                p["conv_w"].astype(jnp.float32))
+                     + p["conv_b"].astype(jnp.float32)).astype(x1.dtype)
+    q = jnp.einsum("be,ehd->bhd", xc, p["wq"])
+    k = jnp.einsum("be,ehd->bhd", xc, p["wk"])
+    v = jnp.einsum("be,ehd->bhd", xi, p["wv"])
+    gif = jnp.einsum("be,egh->bgh", xc, p["w_if"]).astype(jnp.float32) \
+        + p["b_if"]
+    h1, new_state = mlstm_decode(q, k, v, gif[:, 0], gif[:, 1], state)
+    h1 = L.rmsnorm(h1, p["out_norm"])
+    out = jnp.einsum("be,ed->bd", h1.reshape(B, d_inner)
+                     * jax.nn.silu(z), p["down"])
+    return x1 + out, new_state, win[:, 1:]
+
+
+def init_slstm_block(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    H = cfg.num_heads
+    Dh = d // H
+    ks = jax.random.split(key, 6)
+    sd = 1.0 / math.sqrt(d)
+    d_ff = int(math.ceil(4 / 3 * d))
+    return {
+        "ln": L.init_norm(ks[0], d, "layernorm", dtype),
+        "w_gates": (jax.random.normal(ks[1], (d, 4, H, Dh)) * sd).astype(dtype),
+        "b_gates": jnp.zeros((4, H, Dh), jnp.float32)
+        .at[1].set(3.0),  # forget-gate bias init
+        "R": (jax.random.normal(ks[2], (4, H, Dh, Dh))
+              * (1.0 / math.sqrt(Dh))).astype(jnp.float32),
+        "out_norm": jnp.ones((H, Dh), dtype),
+        "proj": (jax.random.normal(ks[3], (d, d)) * sd).astype(dtype),
+        "ffn": L.init_mlp(ks[4], d, d_ff, True, cfg.num_layers, dtype),
+        "ln2": L.init_norm(ks[5], d, "layernorm", dtype),
+    }
+
+
+def slstm_block(p: Params, cfg: ModelConfig, x, state=None,
+                return_state: bool = False, valid=None):
+    B, T, d = x.shape
+    H = cfg.num_heads
+    Dh = d // H
+    h = L.layernorm(x, p["ln"]["scale"], p["ln"]["bias"])
+    xg = jnp.einsum("btd,dghe->btghe", h, p["w_gates"]).astype(jnp.float32) \
+        + p["b_gates"]
+    if valid is not None:
+        # mask the input gate at padded positions so n doesn't accumulate
+        xg = xg.at[:, :, 0].add(
+            jnp.where(valid[:, :, None, None], 0.0, -1e9))
+    if state is None:
+        state = slstm_init_state(B, H, Dh)
+    hseq, new_state = slstm_scan(xg, p["R"], state)
+    hseq = L.rmsnorm(hseq.astype(x.dtype), p["out_norm"])
+    out = jnp.einsum("btd,de->bte", hseq.reshape(B, T, d), p["proj"])
+    x = x + out
+    h2 = L.layernorm(x, p["ln2"]["scale"], p["ln2"]["bias"])
+    x = x + L.mlp(p["ffn"], h2, "gelu", True)
+    if return_state:
+        return x, new_state
+    return x
+
+
+def slstm_block_decode(p: Params, cfg: ModelConfig, x1, state):
+    x, new_state = slstm_block(p, cfg, x1[:, None], state, return_state=True)
+    return x[:, 0], new_state
+
+
+# ---------------------------------------------------------------------------
+# Full xLSTM model: scan over (mLSTM, sLSTM) pairs
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    from repro.models import transformer as TF
+    dtype = cfg.param_dtype
+    n_pairs = cfg.num_layers // 2
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    m_blocks = [init_mlstm_block(keys[2 * i], cfg, dtype)
+                for i in range(n_pairs)]
+    s_blocks = [init_slstm_block(keys[2 * i + 1], cfg, dtype)
+                for i in range(n_pairs)]
+    return {
+        "embed": (jax.random.normal(keys[-1], (cfg.vocab_size, cfg.d_model))
+                  * (1.0 / math.sqrt(cfg.d_model))).astype(dtype),
+        "mlstm": TF._stack(m_blocks),
+        "slstm": TF._stack(s_blocks),
+        "final_norm": L.init_norm(keys[-2], cfg.d_model, "layernorm", dtype),
+        "lm_head": (jax.random.normal(keys[-3], (cfg.d_model, cfg.vocab_size))
+                    * (1.0 / math.sqrt(cfg.d_model))).astype(dtype),
+    }
+
+
+def _lm_logits(params, cfg, x):
+    from repro.models import transformer as TF
+    return TF.lm_logits(params, cfg, x)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens, valid=None):
+    from repro.models import transformer as TF
+    x = TF.embed_tokens(params, cfg, tokens)
+    if valid is not None:
+        x = jnp.where(valid[..., None], x, 0)
+
+    def body(h, bps):
+        mp, sp = bps
+        h = mlstm_block(mp, cfg, h)
+        h = slstm_block(sp, cfg, h, valid=valid)
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, (params["mlstm"], params["slstm"]))
+    return _lm_logits(params, cfg, x)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """Recurrent state only — O(1) in sequence length (long_500k native)."""
+    dtype = dtype or cfg.compute_dtype
+    d = cfg.d_model
+    H = cfg.num_heads
+    n_pairs = cfg.num_layers // 2
+    d_inner = 2 * d
+    Dm = d_inner // H
+    Ds = d // H
+    f32 = jnp.float32
+    return {
+        "mlstm_C": jnp.zeros((n_pairs, batch, H, Dm, Dm), f32),
+        "mlstm_n": jnp.zeros((n_pairs, batch, H, Dm), f32),
+        "mlstm_conv": jnp.zeros((n_pairs, batch, 3, d_inner), dtype),
+        "slstm_c": jnp.zeros((n_pairs, batch, H, Ds), f32),
+        "slstm_n": jnp.zeros((n_pairs, batch, H, Ds), f32),
+        "slstm_h": jnp.zeros((n_pairs, batch, H, Ds), f32),
+        "slstm_m": jnp.full((n_pairs, batch, H, Ds), -1e9, f32),
+    }
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens, cache, prompt_lens):
+    """Left-padded prompts (see hybrid.prefill note)."""
+    from repro.models import transformer as TF
+    B, T = tokens.shape
+    valid = (jnp.arange(T)[None] - (T - prompt_lens)[:, None]) >= 0
+    x = TF.embed_tokens(params, cfg, tokens)
+    x = jnp.where(valid[..., None], x, 0)
+
+    def body(h, xs):
+        mp, sp, mC, mn, mcv, sc, sn, sh, sm = xs
+        h, ((C, n), conv) = mlstm_block(mp, cfg, h, return_state=True)
+        h, (c2, n2, h2, m2) = slstm_block(sp, cfg, h, (sc, sn, sh, sm),
+                                          return_state=True, valid=valid)
+        return h, (C, n, conv, c2, n2, h2, m2)
+
+    xs = (params["mlstm"], params["slstm"], cache["mlstm_C"],
+          cache["mlstm_n"], cache["mlstm_conv"], cache["slstm_c"],
+          cache["slstm_n"], cache["slstm_h"], cache["slstm_m"])
+    x, (C, n, conv, c2, n2, h2, m2) = jax.lax.scan(body, x, xs)
+    cache = {"mlstm_C": C, "mlstm_n": n,
+             "mlstm_conv": conv.astype(cache["mlstm_conv"].dtype),
+             "slstm_c": c2, "slstm_n": n2, "slstm_h": h2, "slstm_m": m2}
+    return _lm_logits(params, cfg, x), cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, token, cache, kv_len=None):
+    from repro.models import transformer as TF
+    x = TF.embed_tokens(params, cfg, token[:, None])[:, 0]
+
+    def body(h, xs):
+        mp, sp, mC, mn, mcv, sc, sn, sh, sm = xs
+        h, (C, n), conv = mlstm_block_decode(mp, cfg, h, (mC, mn), mcv)
+        h, (c2, n2, h2, m2) = slstm_block_decode(sp, cfg, h,
+                                                 (sc, sn, sh, sm))
+        return h, (C, n, conv, c2, n2, h2, m2)
+
+    xs = (params["mlstm"], params["slstm"], cache["mlstm_C"],
+          cache["mlstm_n"], cache["mlstm_conv"], cache["slstm_c"],
+          cache["slstm_n"], cache["slstm_h"], cache["slstm_m"])
+    x, (C, n, conv, c2, n2, h2, m2) = jax.lax.scan(body, x, xs)
+    cache = {"mlstm_C": C, "mlstm_n": n,
+             "mlstm_conv": conv.astype(cache["mlstm_conv"].dtype),
+             "slstm_c": c2, "slstm_n": n2, "slstm_h": h2, "slstm_m": m2}
+    return _lm_logits(params, cfg, x), cache

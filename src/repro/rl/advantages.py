@@ -1,0 +1,68 @@
+"""Advantage estimators (paper §2.1, Eqs. 2-3).
+
+* Reinforce++ (Eq. 3): batch-normalised terminal reward — the estimator
+  whose batch statistics make *selective batching* matter (§3.1): a
+  length-sorted update batch changes mu/sigma_batch, which is part of the
+  micro-curriculum effect SortedRL exploits.
+* GRPO-style group normalisation (per-prompt groups).
+* PPO GAE (Eq. 2) with a value head.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def reinforce_pp(rewards: jnp.ndarray, loss_mask: jnp.ndarray,
+                 eps: float = 1e-6) -> jnp.ndarray:
+    """rewards: (B,) terminal rewards; loss_mask: (B, S) 1.0 on generated
+    tokens.  Returns per-token advantages (B, S): every generated token of
+    trajectory i gets (R_i - mu_batch) / sigma_batch."""
+    mu = jnp.mean(rewards)
+    sigma = jnp.std(rewards)
+    adv = (rewards - mu) / (sigma + eps)
+    return adv[:, None] * loss_mask
+
+
+def grpo(rewards: jnp.ndarray, group_ids: jnp.ndarray,
+         loss_mask: jnp.ndarray, num_groups: int,
+         eps: float = 1e-6) -> jnp.ndarray:
+    """Group-relative normalisation: per-prompt groups of k samples."""
+    onehot = jax.nn.one_hot(group_ids, num_groups)              # (B, G)
+    counts = jnp.maximum(onehot.sum(0), 1.0)                    # (G,)
+    mu_g = (onehot * rewards[:, None]).sum(0) / counts
+    var_g = (onehot * jnp.square(rewards[:, None] - mu_g[None])).sum(0) / counts
+    adv = (rewards - onehot @ mu_g) / (jnp.sqrt(onehot @ var_g) + eps)
+    return adv[:, None] * loss_mask
+
+
+def gae(rewards_t: jnp.ndarray, values: jnp.ndarray, loss_mask: jnp.ndarray,
+        gamma: float = 1.0, lam: float = 0.95) -> jnp.ndarray:
+    """PPO GAE (Eq. 2).  rewards_t: (B, S) per-token rewards (usually the
+    terminal reward at the last generated token); values: (B, S+1) value
+    predictions (bootstrap column appended).  Returns advantages (B, S)."""
+    B, S = rewards_t.shape
+    deltas = rewards_t + gamma * values[:, 1:] * loss_mask - values[:, :-1]
+
+    def step(carry, x):
+        delta, mask = x
+        carry = delta + gamma * lam * mask * carry
+        return carry, carry
+
+    # scan right-to-left over time
+    deltas_T = jnp.moveaxis(deltas, 1, 0)[::-1]
+    mask_T = jnp.moveaxis(loss_mask, 1, 0)[::-1]
+    _, adv_T = jax.lax.scan(step, jnp.zeros(B), (deltas_T, mask_T))
+    adv = jnp.moveaxis(adv_T[::-1], 0, 1)
+    return adv * loss_mask
+
+
+def whiten(adv: jnp.ndarray, loss_mask: jnp.ndarray,
+           eps: float = 1e-6) -> jnp.ndarray:
+    """Masked whitening over the batch (token level)."""
+    n = jnp.maximum(loss_mask.sum(), 1.0)
+    mu = (adv * loss_mask).sum() / n
+    var = (jnp.square(adv - mu) * loss_mask).sum() / n
+    return (adv - mu) * jax.lax.rsqrt(var + eps) * loss_mask

@@ -1,0 +1,93 @@
+"""Policy-gradient losses (paper Eq. 1) with the DAPO tricks used in §4.1:
+clip-higher (asymmetric clipping range), no KL term, no entropy bonus.
+
+The importance ratio uses *cached behaviour log-probs* (pi_old) — in
+partial mode these are stitched across policy versions per token, which is
+exactly the paper's controlled-off-policiness mechanism (§3.2): every
+token's ratio uses the log-prob of the policy version that generated it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LossConfig:
+    clip_eps_low: float = 0.2
+    clip_eps_high: float = 0.28      # DAPO clip-higher
+    kl_coef: float = 0.0             # removed per §4.1
+    entropy_coef: float = 0.0        # removed per §4.1
+    aux_load_balance: float = 1e-2   # MoE router losses
+    aux_router_z: float = 1e-3
+    value_coef: float = 0.5          # PPO critic loss weight
+
+
+def token_logprobs(logits: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """logits: (B, S, V) predicting token t+1 at position t.
+    Returns log pi(tokens[t] | <t) aligned to positions (B, S): entry t is
+    the log-prob OF token t (from logits at t-1); entry 0 is 0."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    lp_next = jnp.take_along_axis(lp[:, :-1], tokens[:, 1:, None],
+                                  axis=2)[..., 0]          # (B, S-1)
+    return jnp.pad(lp_next, ((0, 0), (1, 0)))
+
+
+def ppo_clip_loss(new_logprobs: jnp.ndarray, old_logprobs: jnp.ndarray,
+                  advantages: jnp.ndarray, loss_mask: jnp.ndarray,
+                  cfg: LossConfig) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Eq. 1 with clip-higher.  All inputs (B, S); mask selects generated
+    tokens.  Returns (scalar loss, metrics)."""
+    ratio = jnp.exp(new_logprobs - old_logprobs)
+    unclipped = ratio * advantages
+    clipped = jnp.clip(ratio, 1.0 - cfg.clip_eps_low,
+                       1.0 + cfg.clip_eps_high) * advantages
+    obj = jnp.minimum(unclipped, clipped)
+    n = jnp.maximum(loss_mask.sum(), 1.0)
+    loss = -(obj * loss_mask).sum() / n
+    clip_frac = ((jnp.abs(ratio - 1.0) > cfg.clip_eps_low)
+                 * loss_mask).sum() / n
+    metrics = {
+        "policy_loss": loss,
+        "ratio_mean": (ratio * loss_mask).sum() / n,
+        "clip_frac": clip_frac,
+        "kl_to_old": ((old_logprobs - new_logprobs) * loss_mask).sum() / n,
+    }
+    return loss, metrics
+
+
+def value_loss(values: jnp.ndarray, returns: jnp.ndarray,
+               loss_mask: jnp.ndarray) -> jnp.ndarray:
+    n = jnp.maximum(loss_mask.sum(), 1.0)
+    return 0.5 * (jnp.square(values - returns) * loss_mask).sum() / n
+
+
+def total_loss(logits: jnp.ndarray, aux: Dict[str, jnp.ndarray],
+               batch: Dict[str, jnp.ndarray], cfg: LossConfig,
+               values: Optional[jnp.ndarray] = None,
+               returns: Optional[jnp.ndarray] = None,
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """batch: tokens (B,S), loss_mask (B,S), advantages (B,S),
+    old_logprobs (B,S)."""
+    new_lp = token_logprobs(logits, batch["tokens"])
+    loss, metrics = ppo_clip_loss(new_lp, batch["old_logprobs"],
+                                  batch["advantages"], batch["loss_mask"],
+                                  cfg)
+    if cfg.entropy_coef:
+        p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        ent = -(p * jnp.log(p + 1e-9)).sum(-1)
+        n = jnp.maximum(batch["loss_mask"].sum(), 1.0)
+        ent_mean = (ent * batch["loss_mask"]).sum() / n
+        loss = loss - cfg.entropy_coef * ent_mean
+        metrics["entropy"] = ent_mean
+    if values is not None and returns is not None:
+        vl = value_loss(values, returns, batch["loss_mask"])
+        loss = loss + cfg.value_coef * vl
+        metrics["value_loss"] = vl
+    loss = (loss + cfg.aux_load_balance * aux.get("load_balance", 0.0)
+            + cfg.aux_router_z * aux.get("router_z", 0.0))
+    metrics["total_loss"] = loss
+    return loss, metrics

@@ -1,0 +1,149 @@
+"""RL trainer: converts finished BufferEntries into padded update batches
+and runs the jitted policy-gradient step.
+
+The importance-sampling denominators come straight from the buffer's cached
+per-token behaviour log-probs — the stitched pi_old of partial mode
+(paper §3.2): a trajectory interrupted at version v and resumed at v+1 has
+its first tokens' ratios computed against v and the rest against v+1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.buffer import BufferEntry
+from repro.models.model import Model
+from repro.rl import advantages as A
+from repro.rl.losses import LossConfig, total_loss
+from repro.train.optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Dict
+    opt_state: OptState
+    step: int = 0
+
+
+RewardFn = Callable[[Sequence[int], object], float]
+
+
+def entries_to_batch(entries: Sequence[BufferEntry], reward_fn: RewardFn,
+                     pad_id: int, max_len: int,
+                     advantage_kind: str = "reinforce_pp",
+                     responses_per_prompt: int = 1,
+                     ) -> Tuple[Dict[str, jnp.ndarray], Dict[str, float]]:
+    """Pad trajectories to a common width and build the update batch.
+
+    tokens = [prompt, generated]; loss_mask covers generated tokens;
+    old_logprobs are the buffer's cached behaviour log-probs.
+    """
+    B = len(entries)
+    width = max(e.total_len for e in entries)
+    width = min(max_len, (width + 31) // 32 * 32)   # bucket: bounded recompiles
+    tokens = np.full((B, width), pad_id, np.int32)
+    loss_mask = np.zeros((B, width), np.float32)
+    old_lp = np.zeros((B, width), np.float32)
+    rewards = np.zeros(B, np.float32)
+    staleness = np.zeros(B, np.float32)
+    group_ids = np.zeros(B, np.int32)
+    for i, e in enumerate(entries):
+        seq = (list(e.prompt) + list(e.generated))[:width]
+        tokens[i, :len(seq)] = seq
+        p = min(len(e.prompt), width)
+        g = len(seq) - p
+        loss_mask[i, p:p + g] = 1.0
+        old_lp[i, p:p + g] = e.logprobs[:g]
+        rewards[i] = reward_fn(e.generated, e.meta)
+        staleness[i] = e.staleness(max(v for v in e.versions)
+                                   if e.versions else 0)
+        group_ids[i] = getattr(e.meta, "prompt_id", i) % max(
+            1, B // max(1, responses_per_prompt))
+    lm = jnp.asarray(loss_mask)
+    r = jnp.asarray(rewards)
+    if advantage_kind == "reinforce_pp":
+        adv = A.reinforce_pp(r, lm)
+    elif advantage_kind == "grpo":
+        adv = A.grpo(r, jnp.asarray(group_ids), lm,
+                     num_groups=int(group_ids.max()) + 1)
+    else:
+        raise ValueError(advantage_kind)
+    batch = {
+        "tokens": jnp.asarray(tokens),
+        "loss_mask": lm,
+        "advantages": adv,
+        "old_logprobs": jnp.asarray(old_lp),
+    }
+    info = {
+        "reward_mean": float(rewards.mean()),
+        "reward_std": float(rewards.std()),
+        "gen_len_mean": float(np.mean([e.gen_len for e in entries])),
+        "solve_rate": float(np.mean(rewards >= 1.2)),
+    }
+    return batch, info
+
+
+def make_train_step(model: Model, loss_cfg: LossConfig, opt_cfg: AdamWConfig):
+    """Returns jit-able (params, opt_state, batch) -> (params, opt_state,
+    metrics).  This is also the function the dry-run lowers at full scale."""
+
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch)
+        if model.cfg.family == "vlm" and "patch_embeds" in batch:
+            # logits cover [patches, tokens]; drop patch positions
+            logits = logits[:, model.prefill_extra:]
+        return total_loss(logits, aux, batch, loss_cfg)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+class RLTrainer:
+    """Host-side wrapper the controller's train_fn hooks into."""
+
+    def __init__(self, model: Model, params, reward_fn: RewardFn,
+                 loss_cfg: Optional[LossConfig] = None,
+                 opt_cfg: Optional[AdamWConfig] = None,
+                 pad_id: int = 0, max_len: int = 512,
+                 advantage_kind: str = "reinforce_pp",
+                 responses_per_prompt: int = 1):
+        self.model = model
+        self.loss_cfg = loss_cfg or LossConfig()
+        self.opt_cfg = opt_cfg or AdamWConfig()
+        self.state = TrainState(params, init_opt_state(params, self.opt_cfg))
+        self.reward_fn = reward_fn
+        self.pad_id = pad_id
+        self.max_len = max_len
+        self.advantage_kind = advantage_kind
+        self.responses_per_prompt = responses_per_prompt
+        self._step_jit = jax.jit(make_train_step(model, self.loss_cfg,
+                                                 self.opt_cfg))
+        self.history: List[Dict] = []
+
+    def params(self):
+        return self.state.params
+
+    def update(self, entries: List[BufferEntry], version: int) -> Dict:
+        batch, info = entries_to_batch(
+            entries, self.reward_fn, self.pad_id, self.max_len,
+            self.advantage_kind, self.responses_per_prompt)
+        params, opt_state, metrics = self._step_jit(
+            self.state.params, self.state.opt_state, batch)
+        self.state = TrainState(params, opt_state, self.state.step + 1)
+        rec = {k: float(v) for k, v in metrics.items()}
+        rec.update(info)
+        rec["version"] = version
+        rec["step"] = self.state.step
+        self.history.append(rec)
+        return rec

@@ -1,0 +1,55 @@
+"""Checkpointing: flat .npz of the (params, opt_state) pytree plus a JSON
+manifest.  Dependency-free (no orbax in the container) but preserves the
+tree structure exactly via path-encoded keys.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, params: Any, opt_state: Any = None,
+         meta: Dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = {f"p/{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        arrays.update({f"o/{k}": v for k, v in _flatten(opt_state).items()})
+    np.savez(path, **arrays)
+    with open(path + ".json", "w") as f:
+        json.dump({"meta": meta or {},
+                   "dtypes": {k: str(v.dtype) for k, v in arrays.items()}},
+                  f)
+
+
+def restore(path: str, params_template: Any,
+            opt_template: Any = None) -> Tuple[Any, Any]:
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+
+    def rebuild(template, prefix):
+        leaves_paths = jax.tree_util.tree_flatten_with_path(template)
+        rebuilt = []
+        for path_, leaf in leaves_paths[0]:
+            key = prefix + "/".join(
+                str(getattr(p, "key", getattr(p, "idx", p))) for p in path_)
+            arr = jnp.asarray(data[key]).astype(leaf.dtype)
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            rebuilt.append(arr)
+        return jax.tree_util.tree_unflatten(leaves_paths[1], rebuilt)
+
+    params = rebuild(params_template, "p/")
+    opt = rebuild(opt_template, "o/") if opt_template is not None else None
+    return params, opt

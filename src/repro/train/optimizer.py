@@ -1,0 +1,89 @@
+"""AdamW from scratch (no optax in the container), with configurable state
+dtype (bf16 moments for the >=100B archs so AdamW fits v5e HBM — see
+DESIGN.md §5) and global-norm gradient clipping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    state_dtype: Any = jnp.float32     # bf16 for the huge configs
+    warmup_steps: int = 0
+    total_steps: int = 0               # 0: constant lr after warmup
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def init_opt_state(params: Any, cfg: AdamWConfig) -> OptState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=cfg.state_dtype)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params))
+
+
+def _schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    lr = jnp.asarray(cfg.lr, jnp.float32)
+    if cfg.warmup_steps:
+        lr = lr * jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+    if cfg.total_steps:
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / max(1, cfg.total_steps - cfg.warmup_steps), 0, 1)
+        lr = lr * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return lr
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params: Any, grads: Any, state: OptState, cfg: AdamWConfig
+                 ) -> Tuple[Any, OptState, Dict[str, jnp.ndarray]]:
+    gnorm = global_norm(grads)
+    scale = jnp.where(gnorm > cfg.grad_clip, cfg.grad_clip / (gnorm + 1e-9),
+                      1.0) if cfg.grad_clip else 1.0
+    step = state.step + 1
+    lr = _schedule(cfg, state.step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * cfg.b1 + (1 - cfg.b1) * g
+        v32 = v.astype(jnp.float32) * cfg.b2 + (1 - cfg.b2) * jnp.square(g)
+        mh = m32 / b1c
+        vh = v32 / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return (newp.astype(p.dtype), m32.astype(cfg.state_dtype),
+                v32.astype(cfg.state_dtype))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v), {
+        "grad_norm": gnorm, "lr": lr}

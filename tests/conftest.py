@@ -1,0 +1,11 @@
+import os
+# Tests run single-device (the dry-run sets 512 host devices in its own
+# process only).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)

@@ -1,0 +1,130 @@
+"""Property-based tests (hypothesis) on the stateful rollout buffer's
+invariants: conservation (every prompt trained exactly once), per-mode
+scavenging semantics, token/logprob/version alignment, grouped loading."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.buffer import (BufferEntry, EntryState, Mode,
+                               StatefulRolloutBuffer)
+
+
+def test_on_policy_scavenge_discards():
+    buf = StatefulRolloutBuffer(Mode.ON_POLICY)
+    [uid] = buf.load_prompts([[1, 2, 3]])
+    buf.mark_running([uid])
+    buf.record_tokens(uid, [5, 6], [-0.5, -0.7], version=0)
+    buf.scavenge(uid)
+    e = buf.entries[uid]
+    assert e.generated == [] and e.logprobs == [] and e.versions == []
+    assert e.interruptions == 1 and e.state == EntryState.PENDING
+
+
+def test_partial_scavenge_keeps_prefix():
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    [uid] = buf.load_prompts([[1, 2, 3]])
+    buf.mark_running([uid])
+    buf.record_tokens(uid, [5, 6], [-0.5, -0.7], version=0)
+    buf.scavenge(uid)
+    buf.mark_running([uid])
+    buf.record_tokens(uid, [7], [-0.1], version=1)
+    e = buf.entries[uid]
+    assert e.generated == [5, 6, 7]
+    assert e.logprobs == [-0.5, -0.7, -0.1]
+    assert e.versions == [0, 0, 1]         # stitched pi_old across versions
+    assert e.staleness(1) == (1 + 1 + 0) / 3
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n_prompts=st.integers(1, 30),
+    mode=st.sampled_from([Mode.ON_POLICY, Mode.PARTIAL]),
+    schedule=st.lists(st.tuples(st.integers(0, 4), st.booleans()),
+                      min_size=1, max_size=40),
+)
+def test_conservation(n_prompts, mode, schedule):
+    """Under arbitrary run/record/scavenge/done interleavings, every prompt
+    is consumed exactly once and alignment invariants hold throughout."""
+    buf = StatefulRolloutBuffer(mode)
+    buf.load_prompts([[1]] * n_prompts)
+    version = 0
+    for step, (k, interrupt) in enumerate(schedule):
+        pending = buf.pending()[:max(k, 0) + 1]
+        if pending:
+            buf.mark_running([e.uid for e in pending])
+        for e in buf.running():
+            buf.record_tokens(e.uid, [step % 7], [-1.0], version)
+        running = buf.running()
+        for i, e in enumerate(running):
+            if interrupt and i % 2 == 0:
+                buf.scavenge(e.uid)
+            else:
+                buf.mark_done(e.uid, "eos")
+        buf.consume([e.uid for e in buf.done()])
+        buf.check_invariants()
+        version += 1
+    # drain: everything left finishes
+    while buf.unconsumed():
+        pend = buf.pending()
+        if pend:
+            buf.mark_running([e.uid for e in pend])
+        for e in buf.running():
+            buf.record_tokens(e.uid, [0], [-1.0], version)
+            buf.mark_done(e.uid, "length")
+        buf.consume([e.uid for e in buf.done()])
+        buf.check_invariants()
+    consumed = [e for e in buf.entries.values()
+                if e.state == EntryState.CONSUMED]
+    assert len(consumed) == n_prompts          # exactly once each
+    buf.advance_group()
+    assert buf.group_epoch == 1 and not buf.entries
+
+
+@settings(max_examples=30, deadline=None)
+@given(mode=st.sampled_from([Mode.ON_POLICY, Mode.PARTIAL]),
+       interrupts=st.integers(0, 5))
+def test_alignment_after_interruptions(mode, interrupts):
+    buf = StatefulRolloutBuffer(mode)
+    [uid] = buf.load_prompts([[1, 2]])
+    for v in range(interrupts + 1):
+        buf.mark_running([uid])
+        buf.record_tokens(uid, [v, v + 1], [-0.1 * v, -0.2], v)
+        if v < interrupts:
+            buf.scavenge(uid)
+    buf.mark_done(uid, "eos")
+    e = buf.entries[uid]
+    assert len(e.generated) == len(e.logprobs) == len(e.versions)
+    if mode == Mode.PARTIAL:
+        assert len(e.generated) == 2 * (interrupts + 1)
+        assert e.interruptions == interrupts
+    else:
+        assert len(e.generated) == 2
+
+
+def test_grouped_loading_barrier():
+    buf = StatefulRolloutBuffer(Mode.ON_POLICY)
+    buf.load_prompts([[1], [2]])
+    assert not buf.group_clear()
+    try:
+        buf.advance_group()
+        raised = False
+    except AssertionError:
+        raised = True
+    assert raised
+
+
+def test_pipelined_lookahead():
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    buf.load_prompts([[1]])
+    buf.load_prompts_next_group([[2]])
+    assert buf.group_epoch_load_allowed()
+    lifecycles = sorted(e.lifecycle for e in buf.unconsumed())
+    assert lifecycles == [0, 1]
+    # consume group 0, advance non-strictly
+    e0 = [e for e in buf.unconsumed() if e.lifecycle == 0][0]
+    buf.mark_running([e0.uid])
+    buf.record_tokens(e0.uid, [1], [-1.0], 0)
+    buf.mark_done(e0.uid, "eos")
+    buf.consume([e0.uid])
+    assert buf.current_group_clear() and not buf.group_clear()
+    buf.advance_group(strict=False)
+    assert buf.group_epoch == 1

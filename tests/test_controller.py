@@ -1,0 +1,168 @@
+"""Controller behaviour against the simulator: grouped loading, early
+termination, micro-curriculum ordering, bubble-ratio relations between the
+strategies, and the §4.4.2 ablations."""
+import random
+
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.core.buffer import Mode, StatefulRolloutBuffer
+from repro.core.controller import (CanonicalController, PipelinedController,
+                                   SortedRLConfig, SortedRLController,
+                                   UngroupedController)
+from repro.rollout.sim import SimCostModel, SimEngine, lognormal_lengths
+
+
+def _prompts(n, seed=0):
+    rng = random.Random(seed)
+    return [[1] * rng.randint(8, 32) for _ in range(n)]
+
+
+def _run(strategy, mode=Mode.ON_POLICY, n=128, cap=32, update=32, group=4,
+         seed=1, max_gen=512, sigma=0.8):
+    eng = SimEngine(capacity=cap, max_gen_len=max_gen, seed=seed,
+                    length_sampler=lognormal_lengths(median=60, sigma=sigma,
+                                                     max_len=max_gen))
+    buf = StatefulRolloutBuffer(mode)
+    cfg = SortedRLConfig(mode=mode, rollout_batch=cap, group_size=group,
+                         update_batch=update, max_gen_len=max_gen)
+    batches = []
+
+    def train_fn(entries, version):
+        batches.append([e.gen_len for e in entries])
+
+    if strategy == "sorted":
+        ctl = SortedRLController(eng, buf, cfg, train_fn)
+        ctl.run_group(_prompts(n, seed))
+    elif strategy == "pipelined":
+        ctl = PipelinedController(eng, buf, cfg, train_fn)
+        ctl.queue_group(_prompts(n, seed))
+        ctl.queue_group(_prompts(n, seed + 1))
+        ctl.run_queued()
+    else:
+        ctl = CanonicalController(eng, buf, cfg, train_fn,
+                                  sort_post_hoc=(strategy == "posthoc"))
+        ctl.run_group(_prompts(n, seed))
+    return ctl, batches
+
+
+def test_all_prompts_trained_once():
+    for strategy in ("sorted", "baseline", "posthoc"):
+        ctl, batches = _run(strategy)
+        assert sum(len(b) for b in batches) == 128, strategy
+
+
+def test_micro_curriculum_sorted_batches():
+    """Within each update batch the gen-lengths are sorted, and batch means
+    trend upward within a group (the micro-curriculum)."""
+    _, batches = _run("sorted")
+    for b in batches:
+        assert b == sorted(b)
+    means = [sum(b) / len(b) for b in batches]
+    # later batches are longer on average (allow one inversion for the
+    # leftover batch)
+    inversions = sum(means[i] > means[i + 1] for i in range(len(means) - 1))
+    assert inversions <= 1, means
+
+
+def test_bubble_ratio_ordering():
+    """Sorted scheduling cuts the bubble vs the wait-for-all baseline by
+    >50% (the paper's abstract claim)."""
+    base, _ = _run("baseline", group=1, n=32, cap=32)
+    # 4 sequential batches
+    eng = base.engine
+    sortd, _ = _run("sorted", n=128, cap=32, group=4)
+    assert base.metrics.bubble_ratio > 0.3
+    assert sortd.metrics.bubble_ratio < 0.5 * base.metrics.bubble_ratio
+
+
+def test_on_policy_discards_partial_keeps():
+    on, _ = _run("sorted", mode=Mode.ON_POLICY)
+    part, _ = _run("sorted", mode=Mode.PARTIAL)
+    assert on.metrics.tokens_discarded > 0
+    assert part.metrics.tokens_discarded == 0
+    # partial mode finishes the same workload in less virtual time
+    assert part.metrics.elapsed < on.metrics.elapsed
+
+
+def test_early_termination_happens():
+    ctl, _ = _run("sorted")
+    assert ctl.metrics.harvests >= 4
+    base, _ = _run("baseline")
+    assert base.metrics.harvests == 0
+
+
+def test_pipelined_preserves_group_order():
+    ctl, batches = _run("pipelined")
+    assert sum(len(b) for b in batches) == 256
+    # bubble no worse than strict sorted on the same workload
+    strict, _ = _run("sorted")
+    assert ctl.metrics.bubble_ratio <= strict.metrics.bubble_ratio + 0.05
+
+
+def test_ungrouped_starves_long_prompts():
+    """Ablation §4.4.2: without the group barrier, harvested data biases
+    short — mean trained length is well below the grouped controller's."""
+    eng = SimEngine(capacity=32, max_gen_len=2048, seed=3,
+                    length_sampler=lognormal_lengths(median=60, sigma=1.4,
+                                                     max_len=2048))
+    buf = StatefulRolloutBuffer(Mode.ON_POLICY)
+    cfg = SortedRLConfig(rollout_batch=32, group_size=4, update_batch=32,
+                         max_gen_len=2048)
+    lens = []
+
+    def train_fn(entries, version):
+        lens.extend(e.gen_len for e in entries)
+
+    stream = iter([(p, None) for p in _prompts(4096, seed=3)])
+    ctl = UngroupedController(eng, buf, cfg, train_fn, prompt_stream=stream)
+    ctl.run_steps(n_updates=8)
+    _, grouped_batches = _run("sorted", seed=3, max_gen=2048, sigma=1.4)
+    grouped_mean = sum(sum(b) for b in grouped_batches) / 128
+    ungrouped_mean = sum(lens) / len(lens)
+    assert ungrouped_mean < 0.8 * grouped_mean
+
+
+def test_staleness_bounded_by_group():
+    """Every trained token's policy version is within group_size updates of
+    the update that consumes it (the paper's bounded-staleness argument)."""
+    eng = SimEngine(capacity=32, max_gen_len=256, seed=5)
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    cfg = SortedRLConfig(mode=Mode.PARTIAL, rollout_batch=32, group_size=4,
+                         update_batch=32, max_gen_len=256)
+    worst = []
+
+    def train_fn(entries, version):
+        for e in entries:
+            if e.versions:
+                worst.append(version - min(e.versions))
+
+    ctl = SortedRLController(eng, buf, cfg, train_fn)
+    ctl.run_group(_prompts(128, 5))
+    assert max(worst) <= cfg.group_size + 1
+
+
+def test_fill_policy_tradeoff():
+    """Beyond-paper: fresh_first trades staleness for bubble vs the
+    resume_first default (see EXPERIMENTS.md)."""
+    results = {}
+    for policy in ("resume_first", "fresh_first"):
+        eng = SimEngine(capacity=32, max_gen_len=2048, seed=7,
+                        length_sampler=lognormal_lengths(median=200,
+                                                         sigma=1.2,
+                                                         max_len=2048))
+        buf = StatefulRolloutBuffer(Mode.PARTIAL)
+        cfg = SortedRLConfig(mode=Mode.PARTIAL, rollout_batch=32,
+                             group_size=4, update_batch=32,
+                             max_gen_len=2048)
+        stale = []
+        ctl = SortedRLController(
+            eng, buf, cfg,
+            lambda e, v: stale.extend(x.staleness(v) for x in e),
+            fill_policy=policy)
+        ctl.run_group(_prompts(128, 7))
+        results[policy] = (ctl.metrics.bubble_ratio,
+                           sum(stale) / len(stale))
+    assert results["fresh_first"][0] <= results["resume_first"][0] + 0.02
+    assert results["fresh_first"][1] >= results["resume_first"][1] - 0.02
