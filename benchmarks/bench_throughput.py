@@ -80,8 +80,10 @@ def run(n=512, cap=128, update=128, group=4, max_gen=8192, seed=1,
     return out
 
 
-def main(csv=True) -> List[str]:
-    res = run()
+def main(csv=True, smoke=False) -> List[str]:
+    # smoke: same strategies/relations at ~1/60th the simulated work, so a
+    # tier-1 / CI invocation finishes in well under a second
+    res = run(n=64, cap=16, update=16, max_gen=512) if smoke else run()
     base_tp = res["baseline"]["throughput_tok_per_s"]
     lines = []
     for name, m in res.items():

@@ -9,6 +9,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   roofline_table/*    per (arch x shape) roofline terms (§Roofline)
 
 Full-scale variants: bench_logic_rl --full, repro.launch.dryrun --all.
+
+``--smoke``: seconds-scale pass (reduced simulator workloads, no jit-heavy
+roofline or real-RL sections) — the default verification path; full runs
+are opt-in.
 """
 from __future__ import annotations
 
@@ -19,15 +23,22 @@ import time
 def main() -> None:
     from benchmarks import (bench_ablation, bench_breakdown, bench_logic_rl,
                             bench_throughput, roofline)
-    rows = []
-    for mod, fn in (("breakdown", bench_breakdown.main),
+    smoke = "--smoke" in sys.argv
+    if smoke:
+        sections = (("breakdown", bench_breakdown.main),
+                    ("throughput", lambda: bench_throughput.main(smoke=True)),
+                    ("ablation", bench_ablation.main))
+    else:
+        sections = (("breakdown", bench_breakdown.main),
                     ("throughput", bench_throughput.main),
                     ("ablation", bench_ablation.main),
-                    ("roofline", roofline.main)):
+                    ("roofline", roofline.main))
+    rows = []
+    for mod, fn in sections:
         t0 = time.time()
         rows.extend(fn())
         print(f"# {mod} done in {time.time()-t0:.1f}s", file=sys.stderr)
-    if "--skip-rl" not in sys.argv:
+    if "--skip-rl" not in sys.argv and not smoke:
         t0 = time.time()
         rows.extend(bench_logic_rl.main(quick=True))
         print(f"# logic_rl done in {time.time()-t0:.1f}s", file=sys.stderr)

@@ -15,6 +15,7 @@ SortedRLController implements the five-step cycle of Fig. 2a:
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Callable, List, Optional, Sequence
 
 from repro.core.buffer import BufferEntry, EntryState, Mode, StatefulRolloutBuffer
@@ -69,12 +70,15 @@ class SortedRLController:
         if free <= 0:
             return
         pending = self.buffer.pending()
+        # top-free selection, not a full sort — this runs every decode step
         if self.fill_policy == "resume_first":
-            pending.sort(key=lambda e: (-e.gen_len, len(e.prompt)))
+            batch = heapq.nsmallest(free, pending,
+                                    key=lambda e: (-e.gen_len, len(e.prompt)))
         elif self.fill_policy == "fresh_first":
-            pending.sort(key=lambda e: (e.gen_len, len(e.prompt)))
-        # 'fifo': keep load order
-        batch = pending[:free]
+            batch = heapq.nsmallest(free, pending,
+                                    key=lambda e: (e.gen_len, len(e.prompt)))
+        else:   # 'fifo': keep load order
+            batch = pending[:free]
         if not batch:
             return
         self.buffer.mark_running([e.uid for e in batch])
@@ -120,10 +124,13 @@ class SortedRLController:
 
     # -- training ------------------------------------------------------------
 
+    def _train_order_key(self, e: BufferEntry):
+        return e.gen_len
+
     def train_ready(self, final: bool = False) -> int:
-        """Sort DONE trajectories by length, feed in update_batch batches.
-        Returns number of updates performed."""
-        done = sorted(self.buffer.done(), key=lambda e: e.gen_len)
+        """Sort DONE trajectories (by `_train_order_key`), feed in
+        update_batch batches.  Returns number of updates performed."""
+        done = sorted(self.buffer.done(), key=self._train_order_key)
         n_updates = 0
         while len(done) >= self.cfg.update_batch or (
                 final and done and self.cfg.train_leftover):
@@ -301,20 +308,7 @@ class PipelinedController(SortedRLController):
             elif self.buffer.group_clear():
                 self.buffer.advance_group()
 
-    def train_ready(self, final: bool = False) -> int:
-        """Like the base class, but consume strictly lifecycle-ordered so
-        group g trains before group g+1 (curriculum preserved)."""
-        done = sorted(self.buffer.done(),
-                      key=lambda e: (e.lifecycle, e.gen_len))
-        n_updates = 0
-        while len(done) >= self.cfg.update_batch or (
-                final and done and self.cfg.train_leftover):
-            batch = done[:self.cfg.update_batch]
-            done = done[len(batch):]
-            entries = self.buffer.consume([e.uid for e in batch])
-            self.train_fn(entries, self.version)
-            self.version += 1
-            self.engine.sync_weights(self.version)
-            self.metrics.updates += 1
-            n_updates += 1
-        return n_updates
+    def _train_order_key(self, e: BufferEntry):
+        # strictly lifecycle-ordered so group g trains before group g+1
+        # (curriculum preserved)
+        return (e.lifecycle, e.gen_len)

@@ -53,6 +53,37 @@ _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
 
 
+def _split_args(rest: str) -> List[str]:
+    """Call-argument strings of an instruction line, up to the closing
+    paren.  Depth-aware over (), [] and {} — shape strings like
+    ``f32[128,128]{1,0}`` carry commas that must not split."""
+    args: List[str] = []
+    depth = 0
+    buf = ""
+    for ch in rest:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            if ch == ")" and depth == 0:
+                break
+            depth -= 1
+        if ch == "," and depth == 0:
+            args.append(buf)
+            buf = ""
+        else:
+            buf += ch
+    if buf:
+        args.append(buf)
+    return args
+
+
+def _operand_name(tok: str) -> str:
+    """Operand name from an argument token; newer HLO emitters print
+    ``%name``, older ones ``f32[4,4]{1,0} %name``."""
+    words = tok.split()
+    return words[-1].lstrip("%") if words else ""
+
+
 def _shape_elems_bytes(type_str: str) -> Tuple[float, float]:
     """Total (elements, bytes) of a possibly-tuple type string."""
     elems = 0.0
@@ -109,8 +140,8 @@ def parse_module(text: str) -> Dict[str, List[Instr]]:
 def _dot_flops(instr: Instr, symtab: Dict[str, Instr]) -> float:
     out_elems = instr.out_elems
     # K: product of lhs contracting dim sizes
-    lhs_name = instr.rest.split(",")[0].strip().lstrip("%")
-    lhs = symtab.get(lhs_name)
+    args = _split_args(instr.rest)
+    lhs = symtab.get(_operand_name(args[0])) if args else None
     m = _CONTRACT_RE.search(instr.rest)
     if lhs is None or m is None:
         return 2.0 * out_elems
@@ -238,27 +269,9 @@ class HloCost:
         return total
 
     def _operands(self, instr: Instr, symtab) -> List[Instr]:
-        # operand list: leading names before attribute key=val pairs
-        ops = []
-        depth = 0
-        buf = ""
-        for ch in instr.rest:
-            if ch == "(":
-                depth += 1
-            elif ch == ")":
-                if depth == 0:
-                    break
-                depth -= 1
-            if ch == "," and depth == 0:
-                ops.append(buf)
-                buf = ""
-            else:
-                buf += ch
-        if buf:
-            ops.append(buf)
         out = []
-        for o in ops:
-            nm = o.strip().lstrip("%")
+        for tok in _split_args(instr.rest):
+            nm = _operand_name(tok)
             if nm in symtab:
                 out.append(symtab[nm])
         return out

@@ -9,18 +9,35 @@ out — exactly the padding waste the bubble ratio (Eq. 4) measures.
 
 Weight sync is O(1): the engine reads params through a callback, so the
 trainer's latest state is always visible (colocated / stage-fused setup).
+
+Hot-path notes
+--------------
+* ``step()`` is loop-free on the host: EOS/budget masking, event
+  construction, and slot retirement are numpy array ops over the
+  :class:`SlotTable`.  Events come out in ascending slot order, which is
+  stable for the lifetime of each request's occupancy.
+* Prefill shapes are bucketed — width to the next power of two (clamped
+  to ``max_total_len``) and batch to the next power of two (clamped to
+  ``capacity``) — so ``_prefill_cache`` holds at most
+  O(log max_total_len · log capacity) compiled functions instead of one
+  per exact (width, batch) pair.  Right-padding models mask the extra
+  width via ``prompt_lens``/``kv_len``; left-padding models see a longer
+  pad prefix (masked by their prefill), but since their valid tokens end
+  AT the width, inflation eats generation headroom — their buckets are
+  capped at ``max_total_len - max_gen_len - 1`` with an exact-width
+  fallback for longer prompts (see ``_bucket_width``).
 """
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.buffer import BufferEntry
-from repro.core.engine_api import StepEvent
+from repro.core.engine_api import SlotTable, StepEvent
 from repro.models.model import Model
 
 # per-family cache batch-axis maps (see Model cache layouts)
@@ -35,13 +52,25 @@ CACHE_BATCH_AXIS = {
 }
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    return 1 << (n - 1).bit_length()
+
+
 def cache_put(cache: Dict[str, jnp.ndarray], sub: Dict[str, jnp.ndarray],
               slots: np.ndarray) -> Dict[str, jnp.ndarray]:
-    """Write per-slot sub-cache (batch k) into the engine cache at `slots`."""
+    """Write per-slot sub-cache into the engine cache at `slots`.
+
+    The sub-cache batch may be padded past ``len(slots)`` (batch-bucketed
+    prefill); only the first ``len(slots)`` rows are real and written.
+    """
     out = {}
+    k = len(slots)
     for name, arr in cache.items():
         ax = CACHE_BATCH_AXIS[name]
         sl = sub[name]
+        if sl.shape[ax] != k:
+            sl = jax.lax.slice_in_dim(sl, 0, k, axis=ax)
         idx = (slice(None),) * ax + (slots,)
         out[name] = arr.at[idx].set(sl.astype(arr.dtype))
     return out
@@ -64,18 +93,10 @@ class SlotEngine:
         self._t0 = time.monotonic()
         self.version = 0
 
-        # host-side slot state
-        self.slot_uid = np.full(capacity, -1, np.int64)
-        self.slot_active = np.zeros(capacity, bool)
-        self.slot_next_token = np.zeros(capacity, np.int32)
-        self.slot_kv_len = np.zeros(capacity, np.int32)
-        self.slot_kv_start = np.zeros(capacity, np.int32)
-        self.slot_gen_count = np.zeros(capacity, np.int32)
-        self.slot_gen_budget = np.zeros(capacity, np.int32)
-
+        self.slots = SlotTable(capacity)
         self.cache = model.init_cache(capacity, max_total_len)
         self._decode_jit = jax.jit(self._decode_fn)
-        self._prefill_cache: Dict[int, Callable] = {}
+        self._prefill_cache: Dict[Tuple[int, int], Callable] = {}
 
     # -- time ---------------------------------------------------------------
 
@@ -86,10 +107,10 @@ class SlotEngine:
     # -- slot queries ---------------------------------------------------------
 
     def free_slots(self) -> int:
-        return int((~self.slot_active).sum())
+        return self.slots.free_count()
 
     def active_uids(self) -> List[int]:
-        return [int(u) for u in self.slot_uid[self.slot_active]]
+        return self.slots.active_uids()
 
     def sync_weights(self, version: int) -> None:
         self.version = version   # params_fn always reads the latest state
@@ -99,18 +120,17 @@ class SlotEngine:
     def submit(self, entries: Sequence[BufferEntry], version: int) -> None:
         if not entries:
             return
-        free = np.flatnonzero(~self.slot_active)
-        assert len(entries) <= len(free), "not enough free slots"
-        slots = free[:len(entries)]
+        k = len(entries)
+        slots = self.slots.allocate(k)
         params = self.params_fn()
 
         seqs = [list(e.prompt) + list(e.generated) for e in entries]
         # prefill everything but the last token; it is fed on the next step
         pre = [s[:-1] for s in seqs]
-        width = max(1, max(len(p) for p in pre))
-        k = len(entries)
-        toks = np.full((k, width), self.pad_id, np.int32)
-        plens = np.zeros(k, np.int32)
+        width = self._bucket_width(max(1, max(len(p) for p in pre)))
+        kb = self._bucket_batch(k)
+        toks = np.full((kb, width), self.pad_id, np.int32)
+        plens = np.zeros(kb, np.int32)
         for i, p in enumerate(pre):
             plens[i] = len(p)
             if self.model.padding_side == "right":
@@ -119,23 +139,23 @@ class SlotEngine:
                 toks[i, width - len(p):] = p
 
         batch = {"tokens": jnp.asarray(toks), "prompt_lens": jnp.asarray(plens)}
-        self._add_stub_inputs(batch, k)
-        sub_cache = self.model.init_cache(k, self.max_total_len)
-        _, sub_cache = self._prefill(params, batch, sub_cache, width)
+        self._add_stub_inputs(batch, kb)
+        sub_cache = self.model.init_cache(kb, self.max_total_len)
+        _, sub_cache = self._prefill(params, batch, sub_cache, width, kb)
         self.cache = cache_put(self.cache, sub_cache, slots)
 
-        for i, (slot, e) in enumerate(zip(slots, entries)):
-            self.slot_uid[slot] = e.uid
-            self.slot_active[slot] = True
-            self.slot_next_token[slot] = seqs[i][-1]
-            if self.model.padding_side == "right":
-                self.slot_kv_len[slot] = plens[i] + self.model.prefill_extra
-                self.slot_kv_start[slot] = 0
-            else:
-                self.slot_kv_len[slot] = width
-                self.slot_kv_start[slot] = width - plens[i]
-            self.slot_gen_count[slot] = len(e.generated)
-            self.slot_gen_budget[slot] = self.max_gen_len
+        t = self.slots
+        t.uid[slots] = [e.uid for e in entries]
+        t.active[slots] = True
+        t.next_token[slots] = [s[-1] for s in seqs]
+        if self.model.padding_side == "right":
+            t.kv_len[slots] = plens[:k] + self.model.prefill_extra
+            t.kv_start[slots] = 0
+        else:
+            t.kv_len[slots] = width
+            t.kv_start[slots] = width - plens[:k]
+        t.gen_count[slots] = [len(e.generated) for e in entries]
+        t.gen_budget[slots] = self.max_gen_len
 
     def _add_stub_inputs(self, batch: Dict, k: int) -> None:
         cfg = self.model.cfg
@@ -146,11 +166,29 @@ class SlotEngine:
             batch["frames"] = jnp.zeros(
                 (k, cfg.num_stub_positions, cfg.d_model), cfg.compute_dtype)
 
-    def _prefill(self, params, batch, cache, width):
-        fn = self._prefill_cache.get((width, batch["tokens"].shape[0]))
+    # -- prefill shape bucketing ----------------------------------------------
+
+    def _bucket_width(self, width: int) -> int:
+        assert width <= self.max_total_len, (width, self.max_total_len)
+        if self.model.padding_side == "right":
+            # padded positions beyond prompt_lens are masked via kv_len, so
+            # inflating the width is free
+            return min(next_pow2(width), self.max_total_len)
+        # left padding: valid tokens END at the bucketed width, so kv_len =
+        # width and every padded column eats generation headroom out of the
+        # fixed cache.  Bucket only while the full gen budget still fits;
+        # past that, fall back to the exact width (seed behaviour).
+        safe = self.max_total_len - self.max_gen_len - 1
+        return max(width, min(next_pow2(width), max(safe, 1)))
+
+    def _bucket_batch(self, k: int) -> int:
+        return min(next_pow2(k), self.capacity)
+
+    def _prefill(self, params, batch, cache, width, kb):
+        fn = self._prefill_cache.get((width, kb))
         if fn is None:
             fn = jax.jit(self.model.prefill)
-            self._prefill_cache[(width, batch["tokens"].shape[0])] = fn
+            self._prefill_cache[(width, kb)] = fn
         return fn(params, batch, cache)
 
     # -- decode ---------------------------------------------------------------
@@ -169,46 +207,40 @@ class SlotEngine:
         return sampled.astype(jnp.int32), lp, cache
 
     def step(self) -> List[StepEvent]:
-        if not self.slot_active.any():
+        t = self.slots
+        act = t.active_indices()
+        if act.size == 0:
             return []
         params = self.params_fn()
         self._key, sub = jax.random.split(self._key)
-        kv_len = np.where(self.slot_active, self.slot_kv_len, 0)
+        kv_len = np.where(t.active, t.kv_len, 0).astype(np.int32)
         sampled, lp, self.cache = self._decode_jit(
-            params, jnp.asarray(self.slot_next_token), self.cache,
-            jnp.asarray(kv_len.astype(np.int32)),
-            jnp.asarray(self.slot_kv_start), sub)
+            params, jnp.asarray(t.next_token), self.cache,
+            jnp.asarray(kv_len), jnp.asarray(t.kv_start), sub)
         sampled = np.asarray(sampled)
         lp = np.asarray(lp)
-        events: List[StepEvent] = []
-        for slot in np.flatnonzero(self.slot_active):
-            self.slot_kv_len[slot] += 1
-            self.slot_gen_count[slot] += 1
-            tok = int(sampled[slot])
-            done, reason = False, None
-            if tok == self.eos_id:
-                done, reason = True, "eos"
-            elif (self.slot_gen_count[slot] >= self.slot_gen_budget[slot]
-                  or self.slot_kv_len[slot] >= self.max_total_len - 1):
-                done, reason = True, "length"
-            events.append(StepEvent(uid=int(self.slot_uid[slot]), token=tok,
-                                    logprob=float(lp[slot]), done=done,
-                                    finish_reason=reason))
-            if done:
-                self._free(slot)
-            else:
-                self.slot_next_token[slot] = tok
-        return events
 
-    def _free(self, slot: int) -> None:
-        self.slot_active[slot] = False
-        self.slot_uid[slot] = -1
+        # vectorized bookkeeping over the active slots (ascending order)
+        t.kv_len[act] += 1
+        t.gen_count[act] += 1
+        toks = sampled[act]
+        eos = toks == self.eos_id
+        over = ((t.gen_count[act] >= t.gen_budget[act])
+                | (t.kv_len[act] >= self.max_total_len - 1))
+        done = eos | over
+        reasons = np.where(eos, "eos", np.where(over, "length", None))
+
+        uids = t.uid[act].tolist()          # read before batched release
+        t.release(act[done])
+        cont = act[~done]
+        t.next_token[cont] = toks[~done]
+
+        return [StepEvent(uid=u, token=tk, logprob=l, done=d, finish_reason=r)
+                for u, tk, l, d, r in zip(uids, toks.tolist(), lp[act].tolist(),
+                                          done.tolist(), reasons.tolist())]
 
     def interrupt(self, uids: Optional[Sequence[int]] = None) -> List[int]:
-        out = []
-        for slot in np.flatnonzero(self.slot_active):
-            uid = int(self.slot_uid[slot])
-            if uids is None or uid in uids:
-                out.append(uid)
-                self._free(slot)
+        sel = self.slots.select(uids)
+        out = [int(u) for u in self.slots.uid[sel]]
+        self.slots.release(sel)
         return out

@@ -16,6 +16,12 @@ weight-broadcast latency per update.
 Hidden generation lengths are sampled per (uid, re-roll) from a pluggable
 length distribution; the paper's long-tailed shape (Fig. 1c) is the
 default.
+
+Slot state lives in the same :class:`SlotTable` structure the real engine
+uses — ``gen_count`` is the tokens generated this occupancy, ``kv_start``
+the scavenged prefix carried in, and ``gen_budget`` the (capped) hidden
+length target — so ``step()`` shares the engine's vectorized retirement
+path and its ascending-slot event order.
 """
 from __future__ import annotations
 
@@ -24,8 +30,10 @@ import math
 import random
 from typing import Callable, Dict, List, Optional, Sequence
 
+import numpy as np
+
 from repro.core.buffer import BufferEntry
-from repro.core.engine_api import StepEvent
+from repro.core.engine_api import SlotTable, StepEvent
 
 
 def lognormal_lengths(median: float = 1200.0, sigma: float = 0.9,
@@ -51,14 +59,6 @@ class SimCostModel:
         return self.t_fixed + self.t_token * active if active else 0.0
 
 
-@dataclasses.dataclass
-class _Slot:
-    uid: int
-    target: int          # hidden total generation length for this request
-    generated: int       # tokens generated in THIS occupancy
-    prefix: int          # scavenged tokens carried in (partial mode)
-
-
 class SimEngine:
     """EngineProtocol implementation over a virtual clock."""
 
@@ -74,7 +74,9 @@ class SimEngine:
         self.resample_on_reroll = resample_on_reroll
         self.rng = random.Random(seed)
         self._clock = 0.0
-        self._slots: Dict[int, _Slot] = {}          # slot index -> state
+        self.slots = SlotTable(capacity)
+        # finish reason per slot: True when the hidden target fits the budget
+        self._eos = np.zeros(capacity, bool)
         self._target_by_uid: Dict[int, int] = {}
         self.version = 0
 
@@ -83,10 +85,10 @@ class SimEngine:
         return self._clock
 
     def free_slots(self) -> int:
-        return self.capacity - len(self._slots)
+        return self.slots.free_count()
 
     def active_uids(self) -> List[int]:
-        return [s.uid for s in self._slots.values()]
+        return self.slots.active_uids()
 
     def sync_weights(self, version: int) -> None:
         if version != self.version:
@@ -100,41 +102,38 @@ class SimEngine:
         return self._target_by_uid[e.uid]
 
     def submit(self, entries: Sequence[BufferEntry], version: int) -> None:
-        assert len(entries) <= self.free_slots(), "not enough free slots"
-        free = [i for i in range(self.capacity) if i not in self._slots]
-        for slot, e in zip(free, entries):
-            target = self._target(e)
-            prefix = len(e.generated)
-            self._slots[slot] = _Slot(uid=e.uid, target=target,
-                                      generated=0, prefix=prefix)
-            self._clock += self.cost.t_prefill_token * (len(e.prompt) + prefix)
+        slots = self.slots.allocate(len(entries))
+        targets = np.array([self._target(e) for e in entries], np.int64)
+        prefix = np.array([len(e.generated) for e in entries], np.int32)
+        plens = np.array([len(e.prompt) for e in entries], np.int64)
+        t = self.slots
+        t.uid[slots] = [e.uid for e in entries]
+        t.active[slots] = True
+        t.gen_count[slots] = 0
+        t.kv_start[slots] = prefix
+        t.gen_budget[slots] = np.minimum(targets, self.max_gen_len)
+        self._eos[slots] = targets <= self.max_gen_len
+        self._clock += self.cost.t_prefill_token * float((plens + prefix).sum())
 
     def step(self) -> List[StepEvent]:
-        if not self._slots:
+        t = self.slots
+        act = t.active_indices()
+        if act.size == 0:
             return []
-        self._clock += self.cost.step_time(len(self._slots))
-        events: List[StepEvent] = []
-        finished = []
-        for slot, st in self._slots.items():
-            st.generated += 1
-            total = st.prefix + st.generated
-            done = total >= min(st.target, self.max_gen_len)
-            reason = None
-            if done:
-                reason = "eos" if st.target <= self.max_gen_len else "length"
-                finished.append(slot)
-            events.append(StepEvent(uid=st.uid, token=1,
-                                    logprob=-1.0, done=done,
-                                    finish_reason=reason))
-        for slot in finished:
-            del self._slots[slot]
-        return events
+        self._clock += self.cost.step_time(int(act.size))
+        t.gen_count[act] += 1
+        total = t.kv_start[act] + t.gen_count[act]
+        done = total >= t.gen_budget[act]
+        reasons = np.where(done, np.where(self._eos[act], "eos", "length"),
+                           None)
+        uids = t.uid[act].tolist()          # read before batched release
+        t.release(act[done])
+        return [StepEvent(uid=u, token=1, logprob=-1.0, done=d,
+                          finish_reason=r)
+                for u, d, r in zip(uids, done.tolist(), reasons.tolist())]
 
     def interrupt(self, uids: Optional[Sequence[int]] = None) -> List[int]:
-        out = []
-        for slot in list(self._slots):
-            uid = self._slots[slot].uid
-            if uids is None or uid in uids:
-                out.append(uid)
-                del self._slots[slot]
+        sel = self.slots.select(uids)
+        out = [int(u) for u in self.slots.uid[sel]]
+        self.slots.release(sel)
         return out

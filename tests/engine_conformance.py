@@ -1,0 +1,341 @@
+"""Engine-conformance suite: the executable contract of EngineProtocol.
+
+Every scenario runs IDENTICALLY against the discrete-event SimEngine and a
+tiny-model SlotEngine (real JAX decode), so any future engine backend can
+be added to ``ENGINES`` and inherit the whole contract:
+
+  * free-slot accounting — submit/step/interrupt move slots between free
+    and active exactly; capacity is never exceeded
+  * event/uid consistency — step() emits exactly one event per active
+    slot, in a stable order, for exactly the active uids
+  * finish reasons — done events carry "eos" | "length"; non-done events
+    carry None; done uids leave their slots immediately
+  * interrupt idempotence — a second interrupt is a no-op returning []
+  * scavenge/resume (both buffer modes) and oversubscription refill
+    compose with StatefulRolloutBuffer without violating its invariants
+
+Also pins down the SlotEngine hot-path guarantees of this PR: a loop-free
+``step()`` and a bucketed (bounded) ``_prefill_cache``.
+"""
+import ast
+import inspect
+import math
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.buffer import BufferEntry, Mode, StatefulRolloutBuffer
+from repro.core.engine_api import EngineProtocol, SlotTable
+from repro.rollout.sim import SimEngine
+
+CAPACITY = 4
+MAX_GEN = 6
+MAX_TOTAL = 64
+
+_TINY = {}
+
+
+def _tiny_model():
+    if not _TINY:
+        import jax
+        from repro.data import logic
+        from repro.models.model import build_model
+        from repro.train.loop import tiny_lm_config
+        cfg = tiny_lm_config(len(logic.VOCAB), d_model=32, layers=1, heads=2)
+        model = build_model(cfg)
+        _TINY["model"] = model
+        _TINY["params"] = model.init_params(jax.random.PRNGKey(0))
+        _TINY["pad"] = logic.VOCAB.pad_id
+    return _TINY
+
+
+def make_sim(capacity=CAPACITY, max_gen=MAX_GEN):
+    return SimEngine(capacity=capacity, max_gen_len=max_gen, seed=0)
+
+
+def make_slot(capacity=CAPACITY, max_gen=MAX_GEN, eos_id=-1):
+    from repro.rollout.engine import SlotEngine
+    t = _tiny_model()
+    # eos_id=-1: finishes are budget-driven, so scenarios are deterministic
+    return SlotEngine(t["model"], lambda: t["params"], capacity=capacity,
+                      max_total_len=MAX_TOTAL, max_gen_len=max_gen,
+                      eos_id=eos_id, pad_id=t["pad"], temperature=1.0)
+
+
+def _tiny_left_model():
+    """Smallest left-padding (ssm) model — exercises the kv_start/width
+    accounting path the transformer engine never touches."""
+    if "left_model" not in _TINY:
+        import jax
+        import jax.numpy as jnp
+        from repro.configs.base import get_smoke_config
+        from repro.models.model import build_model
+        cfg = get_smoke_config("xlstm_125m").replace(
+            param_dtype=jnp.float32, compute_dtype=jnp.float32)
+        model = build_model(cfg)
+        assert model.padding_side == "left"
+        _TINY["left_model"] = model
+        _TINY["left_params"] = model.init_params(jax.random.PRNGKey(1))
+    return _TINY["left_model"], _TINY["left_params"]
+
+
+def make_slot_left(capacity=CAPACITY, max_gen=MAX_GEN, eos_id=-1,
+                   max_total=MAX_TOTAL):
+    from repro.rollout.engine import SlotEngine
+    model, params = _tiny_left_model()
+    return SlotEngine(model, lambda: params, capacity=capacity,
+                      max_total_len=max_total, max_gen_len=max_gen,
+                      eos_id=eos_id, pad_id=0, temperature=1.0)
+
+
+ENGINES = [("sim", make_sim), ("slot", make_slot),
+           ("slot_left", make_slot_left)]
+
+
+@pytest.fixture(params=[name for name, _ in ENGINES])
+def engine_factory(request):
+    return dict(ENGINES)[request.param]
+
+
+def entries(n, start_uid=0, prompt_len=3):
+    return [BufferEntry(uid=start_uid + i, prompt=[1] * prompt_len + [2 + i])
+            for i in range(n)]
+
+
+def checked_step(engine):
+    """One engine step with the full event contract asserted."""
+    before = sorted(engine.active_uids())
+    free_before = engine.free_slots()
+    evs = engine.step()
+    assert sorted(ev.uid for ev in evs) == before, \
+        "one event per active slot, for exactly the active uids"
+    done_uids = {ev.uid for ev in evs if ev.done}
+    assert set(engine.active_uids()) == set(before) - done_uids, \
+        "done slots freed, others retained"
+    assert engine.free_slots() == free_before + len(done_uids)
+    for ev in evs:
+        assert isinstance(ev.token, int)
+        assert math.isfinite(ev.logprob)
+        assert (ev.finish_reason is None) == (not ev.done)
+        if ev.done:
+            assert ev.finish_reason in ("eos", "length")
+    return evs
+
+
+def run_to_completion(engine, max_steps=10_000):
+    all_events = []
+    steps = 0
+    while engine.active_uids():
+        all_events.extend(checked_step(engine))
+        steps += 1
+        assert steps < max_steps, "engine failed to drain"
+    return all_events
+
+
+# -- scenarios ----------------------------------------------------------------
+
+def test_protocol_surface(engine_factory):
+    eng = engine_factory()
+    assert isinstance(eng, EngineProtocol)
+    assert eng.capacity == CAPACITY
+    assert isinstance(eng.clock, float)
+    assert eng.free_slots() == CAPACITY and eng.active_uids() == []
+    eng.sync_weights(3)
+    assert eng.version == 3
+
+
+def test_submit_accounting(engine_factory):
+    eng = engine_factory()
+    es = entries(3)
+    eng.submit(es, version=0)
+    assert eng.free_slots() == CAPACITY - 3
+    assert sorted(eng.active_uids()) == [0, 1, 2]
+    # overfilling the remaining slot must raise
+    with pytest.raises(AssertionError):
+        eng.submit(entries(2, start_uid=10), version=0)
+    eng.submit(entries(1, start_uid=10), version=0)
+    assert eng.free_slots() == 0
+
+
+def test_step_events_and_budget(engine_factory):
+    eng = engine_factory()
+    eng.submit(entries(CAPACITY), version=0)
+    evs = run_to_completion(eng)
+    assert eng.free_slots() == CAPACITY
+    per_uid = {u: sum(1 for e in evs if e.uid == u)
+               for u in range(CAPACITY)}
+    # generation budget is a per-trajectory cap
+    assert all(1 <= n <= MAX_GEN for n in per_uid.values()), per_uid
+    assert all(sum(1 for e in evs if e.uid == u and e.done) == 1
+               for u in per_uid)
+
+
+def test_event_order_stable_while_resident(engine_factory):
+    """While a set of requests stays resident, the per-step event order
+    does not change (ascending slot order contract)."""
+    eng = engine_factory()
+    eng.submit(entries(CAPACITY), version=0)
+    order0 = [ev.uid for ev in checked_step(eng)]
+    while True:
+        uids_before = set(eng.active_uids())
+        evs = checked_step(eng)
+        assert [ev.uid for ev in evs] == [u for u in order0
+                                          if u in uids_before]
+        if not eng.active_uids():
+            break
+
+
+def test_interrupt_idempotent(engine_factory):
+    eng = engine_factory()
+    eng.submit(entries(3), version=0)
+    checked_step(eng)
+    survivors = sorted(eng.active_uids())
+    out = eng.interrupt()
+    assert sorted(out) == survivors
+    assert eng.free_slots() == CAPACITY and eng.active_uids() == []
+    assert eng.interrupt() == []              # idempotent on empty
+    assert eng.interrupt(uids=[99]) == []     # unknown uid: no-op
+
+
+def test_interrupt_selective(engine_factory):
+    eng = engine_factory()
+    eng.submit(entries(3), version=0)
+    out = eng.interrupt(uids=[1])
+    assert out == [1]
+    assert sorted(eng.active_uids()) == [0, 2]
+    assert eng.free_slots() == CAPACITY - 2
+    # slots freed by interrupt are immediately reusable
+    eng.submit(entries(2, start_uid=20), version=0)
+    assert eng.free_slots() == 0
+
+
+@pytest.mark.parametrize("mode", [Mode.ON_POLICY, Mode.PARTIAL])
+def test_scavenge_resume_cycle(engine_factory, mode):
+    """interrupt -> buffer.scavenge -> resubmit honours per-mode semantics
+    and the engine treats the scavenged prefix as part of the budget."""
+    eng = engine_factory()
+    buf = StatefulRolloutBuffer(mode)
+    uids = buf.load_prompts([[1, 2, 3]] * 2)
+    buf.mark_running(uids)
+    eng.submit(buf.running(), version=0)
+    for _ in range(2):
+        for ev in checked_step(eng):
+            buf.record_tokens(ev.uid, [ev.token], [ev.logprob], 0)
+            if ev.done:
+                buf.mark_done(ev.uid, ev.finish_reason)
+    for uid in eng.interrupt():
+        buf.scavenge(uid)
+    buf.check_invariants()
+    for e in buf.pending():
+        assert (e.gen_len == 0) if mode == Mode.ON_POLICY else True
+    # resume: remaining budget shrinks by the scavenged prefix
+    resumed = buf.pending()
+    if resumed:
+        buf.mark_running([e.uid for e in resumed])
+        prefixes = {e.uid: e.gen_len for e in resumed}
+        eng.submit(resumed, version=1)
+        evs = [ev for ev in run_to_completion(eng)]
+        for ev in evs:
+            buf.record_tokens(ev.uid, [ev.token], [ev.logprob], 1)
+            if ev.done:
+                buf.mark_done(ev.uid, ev.finish_reason)
+        for uid, prefix in prefixes.items():
+            new = sum(1 for ev in evs if ev.uid == uid)
+            assert prefix + new <= MAX_GEN
+    buf.check_invariants()
+    for e in buf.done():
+        assert len(e.generated) == len(e.logprobs) == len(e.versions)
+
+
+def test_oversubscription_refill(engine_factory):
+    """More prompts than slots: refilling freed slots every step drains the
+    whole workload with slot accounting intact throughout."""
+    n = 3 * CAPACITY
+    eng = engine_factory()
+    buf = StatefulRolloutBuffer(Mode.ON_POLICY)
+    buf.load_prompts([[1, 1 + i % 5] for i in range(n)])
+    steps = 0
+    while buf.pending() or buf.running():
+        batch = buf.pending()[:eng.free_slots()]
+        if batch:
+            buf.mark_running([e.uid for e in batch])
+            eng.submit(batch, version=0)
+        assert len(eng.active_uids()) == len(buf.running())
+        assert eng.free_slots() == CAPACITY - len(buf.running())
+        for ev in checked_step(eng):
+            buf.record_tokens(ev.uid, [ev.token], [ev.logprob], 0)
+            if ev.done:
+                buf.mark_done(ev.uid, ev.finish_reason)
+        steps += 1
+        assert steps < 10_000
+    assert len(buf.done()) == n
+    assert eng.free_slots() == CAPACITY
+    buf.check_invariants()
+
+
+def test_step_on_empty_engine(engine_factory):
+    eng = engine_factory()
+    assert eng.step() == []
+    assert eng.free_slots() == CAPACITY
+
+
+# -- SlotEngine hot-path guarantees (this PR's tentpole) ----------------------
+
+def test_slot_engine_step_is_loop_free():
+    """step() must stay vectorized: no per-slot Python for/while loop
+    (comprehensions build the event list; state updates are array ops)."""
+    from repro.rollout.engine import SlotEngine
+    tree = ast.parse(textwrap.dedent(inspect.getsource(SlotEngine.step)))
+    loops = [n for n in ast.walk(tree)
+             if isinstance(n, (ast.For, ast.While, ast.AsyncFor))]
+    assert not loops, "per-slot Python loop reintroduced in SlotEngine.step"
+
+
+def test_prefill_cache_bounded_by_bucketing():
+    """Submitting many distinct (width, batch) shapes compiles at most
+    O(log max_total_len * log capacity) prefill variants, keyed by
+    power-of-two buckets."""
+    eng = make_slot(capacity=CAPACITY)
+    uid = 0
+    shapes = [(1, 1), (2, 1), (3, 2), (5, 3), (6, 4), (9, 2), (11, 1),
+              (13, 3), (17, 4), (21, 2), (26, 1), (30, 4)]
+    for plen, k in shapes:
+        es = [BufferEntry(uid=uid + i, prompt=[1] * (plen + 1))
+              for i in range(k)]
+        uid += k
+        eng.submit(es, version=0)
+        eng.interrupt()
+    n_width_buckets = int(math.log2(MAX_TOTAL)) + 1
+    n_batch_buckets = int(math.ceil(math.log2(CAPACITY))) + 1
+    assert len(eng._prefill_cache) <= n_width_buckets * n_batch_buckets
+    # far fewer compiles than distinct submitted shapes
+    assert len(eng._prefill_cache) < len(shapes)
+    for width, kb in eng._prefill_cache:
+        assert width == 1 << (width - 1).bit_length() or width == MAX_TOTAL
+        assert kb == 1 << (kb - 1).bit_length() or kb == CAPACITY
+
+
+def test_left_padding_bucketing_keeps_gen_headroom():
+    """Width bucketing must not eat a left-padding model's generation
+    budget: a prompt wider than max_total_len/2 would bucket to
+    max_total_len, set kv_len there, and terminate after one token."""
+    max_gen = 8
+    eng = make_slot_left(capacity=1, max_gen=max_gen, max_total=MAX_TOTAL)
+    plen = MAX_TOTAL // 2 + 4                     # pow2-buckets to MAX_TOTAL
+    eng.submit([BufferEntry(uid=0, prompt=[1] * plen)], version=0)
+    assert int(eng.slots.kv_len[0]) + max_gen < MAX_TOTAL, \
+        "bucketed width left no room for the generation budget"
+    evs = run_to_completion(eng)
+    assert len(evs) == max_gen                    # full budget generated
+    assert evs[-1].done and evs[-1].finish_reason == "length"
+
+
+def test_slot_table_shared_by_both_engines():
+    """Both engines expose the same SlotTable host state — the struct any
+    new backend should reuse."""
+    from repro.rollout.engine import SlotEngine   # noqa: F401
+    for _, factory in ENGINES:
+        eng = factory()
+        assert isinstance(eng.slots, SlotTable)
+        assert eng.slots.capacity == eng.capacity

@@ -1,0 +1,92 @@
+"""Tiny in-repo property-test helper — the repo's replacement for the
+`hypothesis` dependency (tests must collect and run on a clean
+interpreter with no external test packages).
+
+Strategies are seeded-random value generators; `@cases` runs the wrapped
+test once per drawn example.  Deliberately shrink-free: a failing case is
+reported with its index and drawn values, which is enough to reproduce it
+(the draw for case i depends only on (test name, _seed, i)).
+
+Usage mirrors the hypothesis surface we used:
+
+    @cases(max_examples=50,
+           n=integers(1, 30),
+           mode=sampled_from([Mode.ON_POLICY, Mode.PARTIAL]),
+           schedule=lists(tuples(integers(0, 4), booleans()),
+                          min_size=1, max_size=40))
+    def test_something(n, mode, schedule): ...
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from typing import Any, Callable, Sequence
+
+
+class Strategy:
+    """Wraps a draw function (random.Random -> value)."""
+
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+def integers(lo: int, hi: int) -> Strategy:
+    return Strategy(lambda rng: rng.randint(lo, hi))
+
+
+def floats(lo: float, hi: float) -> Strategy:
+    return Strategy(lambda rng: rng.uniform(lo, hi))
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(seq: Sequence) -> Strategy:
+    pool = list(seq)
+    return Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+
+def lists(elem: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+    return Strategy(lambda rng: [elem.example(rng)
+                                 for _ in range(rng.randint(min_size,
+                                                            max_size))])
+
+
+def tuples(*elems: Strategy) -> Strategy:
+    return Strategy(lambda rng: tuple(e.example(rng) for e in elems))
+
+
+def cases(max_examples: int = 30, _seed: int = 0, **strategies: Strategy):
+    """Run the test once per example, kwargs drawn from `strategies`.
+
+    `_seed` varies the whole example stream; each case is independently
+    seeded so a failure report identifies the exact reproducing draw.
+    """
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kw):
+            for i in range(max_examples):
+                # string seeding is deterministic across processes
+                rng = random.Random(f"{fn.__name__}:{_seed}:{i}")
+                drawn = {name: s.example(rng)
+                         for name, s in strategies.items()}
+                try:
+                    fn(*args, **kw, **drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__name__} case {i}/{max_examples} failed "
+                        f"with {drawn!r}") from e
+
+        # hide drawn params from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for name, p in sig.parameters.items()
+                        if name not in strategies])
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

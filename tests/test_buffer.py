@@ -1,8 +1,8 @@
-"""Property-based tests (hypothesis) on the stateful rollout buffer's
-invariants: conservation (every prompt trained exactly once), per-mode
-scavenging semantics, token/logprob/version alignment, grouped loading."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+"""Property-based tests (tests/proptest.py) on the stateful rollout
+buffer's invariants: conservation (every prompt trained exactly once),
+per-mode scavenging semantics, token/logprob/version alignment, grouped
+loading."""
+from proptest import booleans, cases, integers, lists, sampled_from, tuples
 
 from repro.core.buffer import (BufferEntry, EntryState, Mode,
                                StatefulRolloutBuffer)
@@ -34,13 +34,11 @@ def test_partial_scavenge_keeps_prefix():
     assert e.staleness(1) == (1 + 1 + 0) / 3
 
 
-@settings(max_examples=50, deadline=None)
-@given(
-    n_prompts=st.integers(1, 30),
-    mode=st.sampled_from([Mode.ON_POLICY, Mode.PARTIAL]),
-    schedule=st.lists(st.tuples(st.integers(0, 4), st.booleans()),
-                      min_size=1, max_size=40),
-)
+@cases(max_examples=50,
+       n_prompts=integers(1, 30),
+       mode=sampled_from([Mode.ON_POLICY, Mode.PARTIAL]),
+       schedule=lists(tuples(integers(0, 4), booleans()),
+                      min_size=1, max_size=40))
 def test_conservation(n_prompts, mode, schedule):
     """Under arbitrary run/record/scavenge/done interleavings, every prompt
     is consumed exactly once and alignment invariants hold throughout."""
@@ -79,9 +77,9 @@ def test_conservation(n_prompts, mode, schedule):
     assert buf.group_epoch == 1 and not buf.entries
 
 
-@settings(max_examples=30, deadline=None)
-@given(mode=st.sampled_from([Mode.ON_POLICY, Mode.PARTIAL]),
-       interrupts=st.integers(0, 5))
+@cases(max_examples=30,
+       mode=sampled_from([Mode.ON_POLICY, Mode.PARTIAL]),
+       interrupts=integers(0, 5))
 def test_alignment_after_interruptions(mode, interrupts):
     buf = StatefulRolloutBuffer(mode)
     [uid] = buf.load_prompts([[1, 2]])
@@ -128,3 +126,68 @@ def test_pipelined_lookahead():
     assert buf.current_group_clear() and not buf.group_clear()
     buf.advance_group(strict=False)
     assert buf.group_epoch == 1
+
+
+# -- paper-implied edge cases not covered above -------------------------------
+
+@cases(max_examples=20, rounds=integers(2, 6))
+def test_scavenge_after_resume_version_stitching(rounds):
+    """A partial-mode entry interrupted in EVERY round carries a version
+    record that stitches the full history: tokens of round r tagged with
+    version r, monotonically non-decreasing, aligned with logprobs."""
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    [uid] = buf.load_prompts([[1, 2, 3]])
+    for r in range(rounds):
+        buf.mark_running([uid])
+        buf.record_tokens(uid, [10 + r, 20 + r], [-0.1, -0.2], version=r)
+        buf.check_invariants()
+        if r < rounds - 1:
+            buf.scavenge(uid)
+    buf.mark_done(uid, "eos")
+    e = buf.entries[uid]
+    assert e.interruptions == rounds - 1
+    assert e.versions == [v for r in range(rounds) for v in (r, r)]
+    assert e.versions == sorted(e.versions)          # stitched, in order
+    assert len(e.generated) == len(e.logprobs) == 2 * rounds
+    # staleness at consumption time (version == rounds) matches the record
+    want = sum(rounds - v for v in e.versions) / len(e.versions)
+    assert abs(e.staleness(rounds) - want) < 1e-12
+
+
+def test_advance_group_nonstrict_lookahead_bound():
+    """advance_group(strict=False) requires only the *current* epoch to be
+    consumed, and the lookahead window stays bounded at one group."""
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    buf.load_prompts([[1]])
+    [nxt] = buf.load_prompts_next_group([[2]])
+    # current group not consumed -> even the relaxed advance must refuse
+    try:
+        buf.advance_group(strict=False)
+        raised = False
+    except AssertionError:
+        raised = True
+    assert raised
+    # consume the current group; relaxed advance then succeeds
+    [e0] = [e for e in buf.unconsumed() if e.lifecycle == 0]
+    buf.mark_running([e0.uid])
+    buf.record_tokens(e0.uid, [1], [-1.0], 0)
+    buf.mark_done(e0.uid, "eos")
+    buf.consume([e0.uid])
+    buf.advance_group(strict=False)
+    assert buf.group_epoch == 1
+    # the lookahead entry survived the advance and is now current-epoch
+    assert buf.entries[nxt].lifecycle == buf.group_epoch
+    assert buf.group_epoch_load_allowed()
+    buf.load_prompts_next_group([[3]])               # epoch 2: still allowed
+    assert buf.group_epoch_load_allowed()
+    buf.check_invariants()                           # lifecycle <= epoch + 1
+
+
+def test_staleness_mixed_version_trajectory():
+    """staleness() is the mean per-token version lag, not the worst case."""
+    e = BufferEntry(uid=0, prompt=[1], generated=[5, 6, 7],
+                    logprobs=[-1.0] * 3, versions=[0, 2, 3])
+    assert abs(e.staleness(4) - (4 + 2 + 1) / 3) < 1e-12
+    assert abs(e.staleness(3) - (3 + 1 + 0) / 3) < 1e-12
+    # no generated tokens -> zero staleness by definition
+    assert BufferEntry(uid=1, prompt=[1]).staleness(7) == 0.0

@@ -4,8 +4,6 @@ strategies, and the §4.4.2 ablations."""
 import random
 
 import pytest
-from hypothesis import given, settings
-import hypothesis.strategies as st
 
 from repro.core.buffer import Mode, StatefulRolloutBuffer
 from repro.core.controller import (CanonicalController, PipelinedController,

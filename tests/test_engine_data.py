@@ -6,8 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-import hypothesis.strategies as st
+from proptest import cases, integers
 
 from repro.core.buffer import BufferEntry, Mode, StatefulRolloutBuffer
 from repro.data import logic, math_synth
@@ -124,8 +123,7 @@ def test_puzzle_unique_and_verifier():
         assert logic.verify([], meta) == 0.0
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.integers(0, 10_000))
+@cases(max_examples=30, seed=integers(0, 10_000))
 def test_puzzle_statements_consistent(seed):
     import random
     rng = random.Random(seed)

@@ -8,6 +8,8 @@ import pytest
 from repro.kernels.ops import flash_attention, ragged_decode_attention
 from repro.kernels.ref import flash_attention_ref, ragged_decode_attention_ref
 
+pytestmark = pytest.mark.slow   # jit-heavy: Pallas interpret-mode sweeps
+
 KEY = jax.random.PRNGKey(7)
 
 

@@ -10,6 +10,8 @@ import pytest
 from repro.configs.base import ARCH_IDS, get_smoke_config
 from repro.models.model import build_model
 
+pytestmark = pytest.mark.slow   # jit-heavy: compiles all 10 architectures
+
 KEY = jax.random.PRNGKey(0)
 
 
