@@ -7,6 +7,10 @@ bench_logic_rl):
   off-policiness (staleness) stays baseline-high
 * group size n sweep  -> n=1 ~ baseline-ish mix, n=4 paper setting,
   n=8/16 increasingly clustered (degenerate at the extreme)
+
+Every strategy is a registry policy run by the same RolloutOrchestrator;
+``policy_sweep_rows`` drives *every* registered policy through a shared
+workload so new registry entries can't silently rot.
 """
 from __future__ import annotations
 
@@ -15,42 +19,48 @@ from typing import List
 
 from benchmarks.bench_throughput import make_prompts, paper_length_sampler
 from repro.core.buffer import Mode, StatefulRolloutBuffer
-from repro.core.controller import (CanonicalController, SortedRLConfig,
-                                   SortedRLController, UngroupedController)
+from repro.core.orchestrator import RolloutOrchestrator, SortedRLConfig
+from repro.core.policy import available_policies, make_policy
 from repro.rollout.sim import SimEngine
 
 
-def _collect(ctl_kind: str, group=4, n_updates=8, cap=64, max_gen=4096,
+def _collect(policy_name: str, group=4, n_updates=8, cap=64, max_gen=4096,
              seed=2):
     sampler = paper_length_sampler(median=800, max_len=max_gen)
     eng = SimEngine(capacity=cap, max_gen_len=max_gen, seed=seed,
                     length_sampler=sampler)
-    mode = Mode.PARTIAL if ctl_kind != "baseline" else Mode.ON_POLICY
+    mode = Mode.PARTIAL if policy_name != "baseline" else Mode.ON_POLICY
     buf = StatefulRolloutBuffer(mode)
     cfg = SortedRLConfig(mode=mode, rollout_batch=cap, group_size=group,
                          update_batch=cap, max_gen_len=max_gen)
     lens, stale = [], []
 
-    def train_fn(entries, version):
-        lens.append([e.gen_len for e in entries])
+    def train_fn(req):
+        lens.append([e.gen_len for e in req.entries])
         stale.append(statistics.mean(
-            e.staleness(version) for e in entries))
+            e.staleness(req.version) for e in req.entries))
 
-    if ctl_kind == "sorted":
-        ctl = SortedRLController(eng, buf, cfg, train_fn)
-        while len(lens) < n_updates:
-            ctl.run_group(make_prompts(cap * group, seed + len(lens)))
-    elif ctl_kind == "ungrouped":
+    if policy_name == "ungrouped":
         stream = iter([(p, None) for p in make_prompts(100_000, seed)])
-        ctl = UngroupedController(eng, buf, cfg, train_fn,
-                                  prompt_stream=stream)
-        ctl.run_steps(n_updates=n_updates)
-    else:  # baseline / posthoc: paper setting — rollout batch is
-        # group*cap prompts, update batch cap -> `group` off-policy updates
-        ctl = CanonicalController(eng, buf, cfg, train_fn,
-                                  sort_post_hoc=(ctl_kind == "posthoc"))
+        orch = RolloutOrchestrator(
+            eng, buf, cfg, make_policy("ungrouped", prompt_stream=stream),
+            train_fn)
+        orch.run_steps(n_updates=n_updates)
+    elif policy_name == "pipelined":
+        orch = RolloutOrchestrator(eng, buf, cfg, make_policy("pipelined"),
+                                   train_fn)
+        g = 0
         while len(lens) < n_updates:
-            ctl.run_group(make_prompts(cap * group, seed + len(lens)))
+            orch.policy.queue_group(make_prompts(cap * group, seed + g))
+            orch.run_queued()
+            g += 1
+    else:
+        # baseline / posthoc_sort: paper setting — rollout batch is
+        # group*cap prompts, update batch cap -> `group` off-policy updates
+        orch = RolloutOrchestrator(eng, buf, cfg, make_policy(policy_name),
+                                   train_fn)
+        while len(lens) < n_updates:
+            orch.run_group(make_prompts(cap * group, seed + len(lens)))
     flat = [x for b in lens[:n_updates] for x in b]
     intra = statistics.mean(statistics.pstdev(b) for b in lens[:n_updates]
                             if len(b) > 1)
@@ -58,7 +68,7 @@ def _collect(ctl_kind: str, group=4, n_updates=8, cap=64, max_gen=4096,
         "mean_len": statistics.mean(flat),
         "intra_batch_std": intra,
         "mean_staleness": statistics.mean(stale[:n_updates]),
-        "bubble": ctl.metrics.bubble_ratio,
+        "bubble": orch.metrics.bubble_ratio,
     }
 
 
@@ -67,11 +77,8 @@ def fill_policy_rows() -> List[str]:
     freed slot).  resume_first = paper-spirit default (bounded staleness);
     fresh_first finishes harvests faster (lower bubble) at higher
     staleness — a second bubble/staleness knob besides group size."""
-    from benchmarks.bench_throughput import (make_prompts,
-                                             paper_length_sampler)
-    from repro.core.controller import SortedRLController as Ctl
     out = []
-    for policy in ("resume_first", "fresh_first"):
+    for fill in ("resume_first", "fresh_first"):
         eng = SimEngine(capacity=128, max_gen_len=8192, seed=1,
                         length_sampler=paper_length_sampler())
         buf = StatefulRolloutBuffer(Mode.PARTIAL)
@@ -79,23 +86,40 @@ def fill_policy_rows() -> List[str]:
                              group_size=4, update_batch=128,
                              max_gen_len=8192)
         stale = []
-        ctl = Ctl(eng, buf, cfg,
-                  lambda e, v: stale.extend(x.staleness(v) for x in e),
-                  fill_policy=policy)
-        ctl.run_group(make_prompts(512, 1))
-        m = ctl.metrics
-        out.append(f"fill_policy/{policy},{m.elapsed*1e6:.0f},"
+        orch = RolloutOrchestrator(
+            eng, buf, cfg, make_policy("sorted", fill_policy=fill),
+            lambda req: stale.extend(x.staleness(req.version)
+                                     for x in req.entries))
+        orch.run_group(make_prompts(512, 1))
+        m = orch.metrics
+        out.append(f"fill_policy/{fill},{m.elapsed*1e6:.0f},"
                    f"bubble={m.bubble_ratio:.4f} "
                    f"tput={m.throughput:.0f} "
                    f"staleness={sum(stale)/len(stale):.3f}")
     return out
 
 
+def policy_sweep_rows(cap=16, group=2, n_updates=4, max_gen=512,
+                      seed=11) -> List[str]:
+    """Smoke-sweep EVERY registered policy through the orchestrator on a
+    small shared workload — a registry entry that stops running (or stops
+    training every loaded prompt) fails here by name."""
+    out = []
+    for name in available_policies():
+        r = _collect(name, group=group, n_updates=n_updates, cap=cap,
+                     max_gen=max_gen, seed=seed)
+        out.append(f"policy_sweep/{name},0,mean_len={r['mean_len']:.0f} "
+                   f"staleness={r['mean_staleness']:.2f} "
+                   f"bubble={r['bubble']:.3f}")
+    return out
+
+
 def main() -> List[str]:
     lines = []
-    for kind in ("baseline", "posthoc", "sorted", "ungrouped"):
+    for kind in ("baseline", "posthoc_sort", "sorted", "ungrouped"):
         r = _collect(kind)
-        lines.append(f"fig6a_ablation/{kind},0,mean_len={r['mean_len']:.0f} "
+        label = "posthoc" if kind == "posthoc_sort" else kind
+        lines.append(f"fig6a_ablation/{label},0,mean_len={r['mean_len']:.0f} "
                      f"intra_std={r['intra_batch_std']:.0f} "
                      f"staleness={r['mean_staleness']:.2f} "
                      f"bubble={r['bubble']:.3f}")
@@ -106,6 +130,7 @@ def main() -> List[str]:
                      f"staleness={r['mean_staleness']:.2f} "
                      f"bubble={r['bubble']:.3f}")
     lines.extend(fill_policy_rows())
+    lines.extend(policy_sweep_rows())
     return lines
 
 

@@ -13,7 +13,8 @@ from typing import List
 
 from benchmarks.bench_throughput import make_prompts, paper_length_sampler
 from repro.core.buffer import Mode, StatefulRolloutBuffer
-from repro.core.controller import CanonicalController, SortedRLConfig
+from repro.core.orchestrator import RolloutOrchestrator, SortedRLConfig
+from repro.core.policy import make_policy
 from repro.rollout.sim import SimCostModel, SimEngine
 
 
@@ -24,9 +25,10 @@ def rollout_time(max_gen: int, n=128, seed=0) -> float:
     buf = StatefulRolloutBuffer(Mode.ON_POLICY)
     cfg = SortedRLConfig(rollout_batch=n, group_size=1, update_batch=n,
                          max_gen_len=max_gen)
-    ctl = CanonicalController(eng, buf, cfg, lambda e, v: None)
-    ctl.run_group(make_prompts(n, seed))
-    return ctl.metrics.elapsed, ctl.metrics.tokens_generated
+    orch = RolloutOrchestrator(eng, buf, cfg, make_policy("baseline"),
+                               lambda req: None)
+    orch.run_group(make_prompts(n, seed))
+    return orch.metrics.elapsed, orch.metrics.tokens_generated
 
 
 def main() -> List[str]:

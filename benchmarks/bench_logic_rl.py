@@ -14,7 +14,7 @@ import json
 from typing import List
 
 from repro.core.buffer import Mode
-from repro.train.loop import RLExperimentConfig, run_logic_rl
+from repro.rl.session import RLSession, SessionConfig
 
 
 def run_all(quick: bool = True, seed: int = 0):
@@ -23,13 +23,13 @@ def run_all(quick: bool = True, seed: int = 0):
                 d_model=96, layers=2, eval_size=48, eval_every=2, seed=seed,
                 max_gen_len=24)
     runs = {}
-    for strategy, mode in (("sorted", Mode.ON_POLICY),
-                           ("sorted", Mode.PARTIAL),
-                           ("baseline", Mode.ON_POLICY)):
+    for policy, mode in (("sorted", Mode.ON_POLICY),
+                         ("sorted", Mode.PARTIAL),
+                         ("baseline", Mode.ON_POLICY)):
         name = ("on_policy" if mode == Mode.ON_POLICY else "partial") \
-            if strategy == "sorted" else "baseline"
-        cfg = RLExperimentConfig(strategy=strategy, mode=mode, **base)
-        runs[name] = run_logic_rl(cfg)
+            if policy == "sorted" else "baseline"
+        cfg = SessionConfig(task="logic", policy=policy, mode=mode, **base)
+        runs[name] = RLSession.from_config(cfg).run()
     return runs
 
 

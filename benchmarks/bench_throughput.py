@@ -1,6 +1,6 @@
 """Paper Fig. 5 + Eq. 4 reproduction: rollout throughput and bubble ratio
 for baseline / on-policy SortedRL / partial SortedRL (+ the beyond-paper
-pipelined controller) on the paper's workload: 512 samples in 4 batches of
+pipelined policy) on the paper's workload: 512 samples in 4 batches of
 128, 8k generation budget, *identical* per-sample lengths across
 strategies (the paper pins sampling so lengths match the baseline).
 
@@ -14,8 +14,8 @@ import random
 from typing import Dict, List
 
 from repro.core.buffer import Mode, StatefulRolloutBuffer
-from repro.core.controller import (CanonicalController, PipelinedController,
-                                   SortedRLConfig, SortedRLController)
+from repro.core.orchestrator import RolloutOrchestrator, SortedRLConfig
+from repro.core.policy import make_policy
 from repro.rollout.sim import SimCostModel, SimEngine
 
 
@@ -39,42 +39,36 @@ def run(n=512, cap=128, update=128, group=4, max_gen=8192, seed=1,
     sampler = paper_length_sampler(max_len=max_gen)
     out = {}
 
-    def train_fn(entries, version):
+    def train_fn(req):
         pass
 
+    def orch(mode, group_size, policy):
+        eng = SimEngine(capacity=cap, max_gen_len=max_gen, seed=seed,
+                        cost=cost, length_sampler=sampler)
+        buf = StatefulRolloutBuffer(mode)
+        cfg = SortedRLConfig(mode=mode, rollout_batch=cap,
+                             group_size=group_size, update_batch=update,
+                             max_gen_len=max_gen)
+        return RolloutOrchestrator(eng, buf, cfg, make_policy(policy),
+                                   train_fn)
+
     # baseline: 4 sequential batches of `cap`, wait-for-all each
-    eng = SimEngine(capacity=cap, max_gen_len=max_gen, seed=seed, cost=cost,
-                    length_sampler=sampler)
-    buf = StatefulRolloutBuffer(Mode.ON_POLICY)
-    cfg = SortedRLConfig(rollout_batch=cap, group_size=1, update_batch=update,
-                         max_gen_len=max_gen)
-    base = CanonicalController(eng, buf, cfg, train_fn)
+    base = orch(Mode.ON_POLICY, 1, "baseline")
     for i in range(n // cap):
         base.run_group(prompts[i * cap:(i + 1) * cap])
     out["baseline"] = base.metrics.summary()
 
     for mode, name in ((Mode.ON_POLICY, "sorted_on_policy"),
                        (Mode.PARTIAL, "sorted_partial")):
-        eng = SimEngine(capacity=cap, max_gen_len=max_gen, seed=seed,
-                        cost=cost, length_sampler=sampler)
-        buf = StatefulRolloutBuffer(mode)
-        cfg = SortedRLConfig(mode=mode, rollout_batch=cap, group_size=group,
-                             update_batch=update, max_gen_len=max_gen)
-        ctl = SortedRLController(eng, buf, cfg, train_fn)
-        ctl.run_group(prompts)
-        out[name] = ctl.metrics.summary()
+        o = orch(mode, group, "sorted")
+        o.run_group(prompts)
+        out[name] = o.metrics.summary()
 
     # beyond-paper: pipelined (relaxed barrier), 4 groups streamed
-    eng = SimEngine(capacity=cap, max_gen_len=max_gen, seed=seed, cost=cost,
-                    length_sampler=sampler)
-    buf = StatefulRolloutBuffer(Mode.PARTIAL)
-    cfg = SortedRLConfig(mode=Mode.PARTIAL, rollout_batch=cap,
-                         group_size=group, update_batch=update,
-                         max_gen_len=max_gen)
-    pip = PipelinedController(eng, buf, cfg, train_fn)
+    pip = orch(Mode.PARTIAL, group, "pipelined")
     big = make_prompts(4 * n, seed)
     for i in range(4):
-        pip.queue_group(big[i * n:(i + 1) * n])
+        pip.policy.queue_group(big[i * n:(i + 1) * n])
     pip.run_queued()
     out["pipelined_partial(beyond-paper)"] = pip.metrics.summary()
     return out

@@ -5,6 +5,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig5_throughput/*   throughput + bubble ratio per strategy (Fig. 5, Eq. 4)
   fig6a_ablation/*    grouped-rollout / post-hoc-sort ablations (Fig. 6a)
   fig6b_group_size/*  group-size sensitivity (Fig. 6b)
+  fill_policy/*       beyond-paper slot-fill study
+  policy_sweep/*      every registered SchedulerPolicy, by name
   fig3_logic_rl/*     real RL token-efficiency on K&K (Fig. 3, quick mode)
   roofline_table/*    per (arch x shape) roofline terms (§Roofline)
 
@@ -12,12 +14,36 @@ Full-scale variants: bench_logic_rl --full, repro.launch.dryrun --all.
 
 ``--smoke``: seconds-scale pass (reduced simulator workloads, no jit-heavy
 roofline or real-RL sections) — the default verification path; full runs
-are opt-in.
+are opt-in.  The smoke pass sweeps every registered scheduling policy by
+name and runs examples/quickstart.py end to end, so a registry entry (or
+the quickstart) that rots fails the smoke gate.
 """
 from __future__ import annotations
 
+import os
+import subprocess
 import sys
 import time
+
+
+def quickstart_smoke_row() -> str:
+    """Run examples/quickstart.py in a subprocess as a smoke check."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    t0 = time.time()
+    proc = subprocess.run(
+        [sys.executable, os.path.join(root, "examples", "quickstart.py")],
+        capture_output=True, text=True, env=env, timeout=600)
+    dt = time.time() - t0
+    ok = (proc.returncode == 0
+          and "micro-curriculum batch means:" in proc.stdout)
+    if not ok:
+        print(proc.stdout, file=sys.stderr)
+        print(proc.stderr, file=sys.stderr)
+        raise RuntimeError("examples/quickstart.py smoke check failed")
+    return f"smoke/quickstart,{dt*1e6:.0f},ok=1"
 
 
 def main() -> None:
@@ -25,13 +51,17 @@ def main() -> None:
                             bench_throughput, roofline)
     smoke = "--smoke" in sys.argv
     if smoke:
+        # ablation.main carries the acceptance-pinned fig6a/6b rows AND the
+        # all-registered-policies sweep
         sections = (("breakdown", bench_breakdown.main),
                     ("throughput", lambda: bench_throughput.main(smoke=True)),
-                    ("ablation", bench_ablation.main))
+                    ("ablation", bench_ablation.main),
+                    ("quickstart", lambda: [quickstart_smoke_row()]))
     else:
         sections = (("breakdown", bench_breakdown.main),
                     ("throughput", bench_throughput.main),
                     ("ablation", bench_ablation.main),
+                    ("quickstart", lambda: [quickstart_smoke_row()]),
                     ("roofline", roofline.main))
     rows = []
     for mod, fn in sections:

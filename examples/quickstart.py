@@ -1,14 +1,18 @@
 """Quickstart: SortedRL scheduling in ~40 lines.
 
-Runs the length-aware controller against the discrete-event engine on the
-paper's workload shape and prints the bubble ratio + micro-curriculum.
+Picks the length-aware policy from the registry, hands it to the
+orchestrator, and runs it against the discrete-event engine on the
+paper's workload shape, printing the bubble ratio + micro-curriculum.
+Swap the policy name ("baseline", "posthoc_sort", "pipelined", ...) to
+compare strategies — the orchestration mechanics are shared.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import random
 
 from repro.core.buffer import Mode, StatefulRolloutBuffer
-from repro.core.controller import SortedRLConfig, SortedRLController
+from repro.core.orchestrator import RolloutOrchestrator, SortedRLConfig
+from repro.core.policy import make_policy
 from repro.rollout.sim import SimEngine, lognormal_lengths
 
 
@@ -26,16 +30,17 @@ def main():
 
     batches = []
 
-    def train_fn(entries, version):
-        lens = [e.gen_len for e in entries]
+    def train_fn(req):
+        lens = [e.gen_len for e in req.entries]
         batches.append(lens)
-        print(f"update v{version}: {len(entries)} trajectories, "
+        print(f"update v{req.version}: {len(req.entries)} trajectories, "
               f"mean len {sum(lens)/len(lens):.0f} "
               f"(sorted: {lens == sorted(lens)})")
 
-    ctl = SortedRLController(engine, buffer, cfg, train_fn)
-    ctl.run_group(prompts)
-    print("\nrollout metrics:", ctl.metrics.summary())
+    orch = RolloutOrchestrator(engine, buffer, cfg, make_policy("sorted"),
+                               train_fn)
+    orch.run_group(prompts)
+    print("\nrollout metrics:", orch.metrics.summary())
     print("micro-curriculum batch means:",
           [round(sum(b) / len(b)) for b in batches])
 

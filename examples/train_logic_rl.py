@@ -1,20 +1,22 @@
 """End-to-end RL training driver (paper §4.2 at CPU scale): SFT warm-up,
-then Reinforce++ with the chosen scheduling strategy on Knights & Knaves.
+then Reinforce++ with the chosen scheduling policy on Knights & Knaves,
+built by the one-call session builder.
 
-  PYTHONPATH=src python examples/train_logic_rl.py --strategy sorted \
+  PYTHONPATH=src python examples/train_logic_rl.py --policy sorted \
       --mode on_policy --groups 4
 """
 import argparse
 import json
 
 from repro.core.buffer import Mode
-from repro.train.loop import RLExperimentConfig, run_logic_rl
+from repro.core.policy import available_policies
+from repro.rl.session import RLSession, SessionConfig
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--strategy", default="sorted",
-                    choices=["sorted", "baseline", "posthoc_sort"])
+    ap.add_argument("--policy", "--strategy", dest="policy",
+                    default="sorted", choices=available_policies())
     ap.add_argument("--mode", default="on_policy",
                     choices=["on_policy", "partial"])
     ap.add_argument("--groups", type=int, default=4)
@@ -26,12 +28,12 @@ def main():
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
-    cfg = RLExperimentConfig(
-        strategy=args.strategy, mode=Mode(args.mode),
+    cfg = SessionConfig(
+        task="logic", policy=args.policy, mode=Mode(args.mode),
         rollout_batch=args.rollout_batch, update_batch=args.update_batch,
         group_size=args.group_size, n_groups=args.groups,
         sft_steps=args.sft_steps, seed=args.seed)
-    out = run_logic_rl(cfg)
+    out = RLSession.from_config(cfg).run()
     print("final eval:", out["final_eval"])
     print("rollout:", out["rollout_metrics"])
     for ev in out["evals"]:

@@ -1,314 +1,109 @@
-"""Length-aware controller (paper §3.1, §3.3) plus the canonical baseline
-and the two ablation controllers from §4.4.2.
+"""Back-compat controller shims over the policy/orchestrator split.
 
-SortedRLController implements the five-step cycle of Fig. 2a:
-  1) concatenate buffer and feed prompts (oversubscription: free slots are
-     refilled from the pending pool at every step — the engine always runs
-     at its saturation batch),
-  2) early termination once the harvest threshold is met,
-  3) collect and update rollout trajectories (scavenge per mode),
-  4) sort ready trajectories by generated length and feed the trainer in
-     update_batch-sized batches (selective batching / micro-curriculum),
-  5) grouped loading: a new group of n*b prompts is admitted only when the
-     current group is fully consumed.
+The controller family used to re-implement the fill/step/harvest/train
+loop four times.  That loop now lives once in
+:class:`repro.core.orchestrator.RolloutOrchestrator`; the strategies are
+:class:`repro.core.policy.SchedulerPolicy` objects selected by name from
+a registry.  New code should wire those directly::
+
+    from repro.core.orchestrator import RolloutOrchestrator, SortedRLConfig
+    from repro.core.policy import make_policy
+
+    orch = RolloutOrchestrator(engine, buffer, cfg,
+                               make_policy("sorted"), train_fn)
+    orch.run_group(prompts, metas)
+
+The classes below keep the historical constructor signatures (including
+the bare ``(entries, version)`` train callback) and map 1:1 onto a
+policy:
+
+    SortedRLController    -> make_policy("sorted", fill_policy=...)
+    CanonicalController   -> make_policy("baseline" | "posthoc_sort")
+    UngroupedController   -> make_policy("ungrouped", prompt_stream=...)
+    PipelinedController   -> make_policy("pipelined", lookahead=...)
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional
 
-from repro.core.buffer import BufferEntry, EntryState, Mode, StatefulRolloutBuffer
-from repro.core.engine_api import EngineProtocol, StepEvent
+from repro.core.buffer import BufferEntry, StatefulRolloutBuffer
+from repro.core.engine_api import EngineProtocol
 from repro.core.metrics import RolloutMetrics
+from repro.core.orchestrator import (RolloutOrchestrator, SortedRLConfig,
+                                     UpdateRequest)
+from repro.core.policy import (BaselinePolicy, PipelinedPolicy,
+                               PostHocSortPolicy, SortedPolicy,
+                               UngroupedPolicy)
 
+__all__ = ["SortedRLConfig", "TrainFn", "SortedRLController",
+           "CanonicalController", "UngroupedController",
+           "PipelinedController"]
 
-@dataclasses.dataclass
-class SortedRLConfig:
-    mode: Mode = Mode.ON_POLICY
-    rollout_batch: int = 128          # b — prompts loaded per batch
-    group_size: int = 4               # n — batches per group (n*b prompts)
-    update_batch: int = 128           # trajectories per trainer update
-    max_gen_len: int = 4096
-    # harvest when this many trajectories are ready (defaults to
-    # update_batch); `None` disables early termination (baseline).
-    harvest_threshold: Optional[int] = None
-    # train on leftover (< update_batch) trajectories at group end
-    train_leftover: bool = True
-
-    def resolved_threshold(self) -> int:
-        return self.harvest_threshold or self.update_batch
-
-
-# trainer callback: (entries, version) -> None.  The controller bumps the
-# version after each call and syncs engine weights.
+# legacy trainer callback: (entries, version) -> None
 TrainFn = Callable[[List[BufferEntry], int], None]
 
 
-class SortedRLController:
-    """fill_policy (beyond-paper study, EXPERIMENTS §Claims/fig6a):
-    'resume_first' (default) schedules scavenged partials before fresh
-    prompts — bounds their staleness and finishes long stragglers early;
-    'fresh_first' defers partials; 'fifo' ignores progress."""
+def _wrap_legacy(train_fn: TrainFn):
+    def typed(req: UpdateRequest) -> None:
+        train_fn(req.entries, req.version)
+    return typed
+
+
+class SortedRLController(RolloutOrchestrator):
+    """Paper §3.1/§3.3 strategy (shim; see module docstring)."""
 
     def __init__(self, engine: EngineProtocol, buffer: StatefulRolloutBuffer,
                  cfg: SortedRLConfig, train_fn: TrainFn,
                  metrics: Optional[RolloutMetrics] = None,
                  fill_policy: str = "resume_first"):
-        self.engine = engine
-        self.buffer = buffer
-        self.cfg = cfg
-        self.train_fn = train_fn
-        self.version = 0
-        self.metrics = metrics or RolloutMetrics(capacity=engine.capacity)
+        super().__init__(engine, buffer, cfg,
+                         SortedPolicy(fill_policy=fill_policy),
+                         _wrap_legacy(train_fn), metrics)
         self.fill_policy = fill_policy
 
-    # -- engine feeding ----------------------------------------------------
 
-    def _fill_engine(self) -> None:
-        free = self.engine.free_slots()
-        if free <= 0:
-            return
-        pending = self.buffer.pending()
-        # top-free selection, not a full sort — this runs every decode step
-        if self.fill_policy == "resume_first":
-            batch = heapq.nsmallest(free, pending,
-                                    key=lambda e: (-e.gen_len, len(e.prompt)))
-        elif self.fill_policy == "fresh_first":
-            batch = heapq.nsmallest(free, pending,
-                                    key=lambda e: (e.gen_len, len(e.prompt)))
-        else:   # 'fifo': keep load order
-            batch = pending[:free]
-        if not batch:
-            return
-        self.buffer.mark_running([e.uid for e in batch])
-        self.engine.submit(batch, self.version)
-        self.metrics.prompts_prefilled += len(batch)
-
-    # -- event plumbing ------------------------------------------------------
-
-    def _apply_events(self, events: Sequence[StepEvent], t0: float) -> int:
-        done_count = 0
-        for ev in events:
-            self.buffer.record_tokens(ev.uid, [ev.token], [ev.logprob],
-                                      self.version)
-            if ev.done:
-                self.buffer.mark_done(ev.uid, ev.finish_reason or "eos")
-                done_count += 1
-        dt = self.engine.clock - t0
-        self.metrics.record(len(events), dt, new_tokens=len(events))
-        return done_count
-
-    # -- one rollout iteration: decode until harvest ------------------------
-
-    def rollout_until_harvest(self) -> None:
-        threshold = min(self.cfg.resolved_threshold(),
-                        len(self.buffer.unconsumed()))
-        while True:
-            self._fill_engine()
-            if not self.engine.active_uids():
-                break
-            t0 = self.engine.clock
-            events = self.engine.step()
-            self._apply_events(events, t0)
-            if len(self.buffer.done()) >= threshold:
-                break
-        # early termination of stragglers (both modes; on-policy discards)
-        interrupted = self.engine.interrupt()
-        for uid in interrupted:
-            e = self.buffer.entries[uid]
-            if self.buffer.mode == Mode.ON_POLICY:
-                self.metrics.tokens_discarded += e.gen_len
-            self.buffer.scavenge(uid)
-        self.metrics.harvests += 1
-
-    # -- training ------------------------------------------------------------
-
-    def _train_order_key(self, e: BufferEntry):
-        return e.gen_len
-
-    def train_ready(self, final: bool = False) -> int:
-        """Sort DONE trajectories (by `_train_order_key`), feed in
-        update_batch batches.  Returns number of updates performed."""
-        done = sorted(self.buffer.done(), key=self._train_order_key)
-        n_updates = 0
-        while len(done) >= self.cfg.update_batch or (
-                final and done and self.cfg.train_leftover):
-            batch = done[:self.cfg.update_batch]
-            done = done[len(batch):]
-            entries = self.buffer.consume([e.uid for e in batch])
-            self.train_fn(entries, self.version)
-            self.version += 1
-            self.engine.sync_weights(self.version)
-            self.metrics.updates += 1
-            n_updates += 1
-        return n_updates
-
-    # -- group loop ------------------------------------------------------------
-
-    def run_group(self, prompts: Sequence[Sequence[int]],
-                  metas: Optional[Sequence] = None) -> None:
-        """Process one group of n*b prompts to full consumption."""
-        assert self.buffer.group_clear(), "previous group not consumed"
-        self.buffer.load_prompts(prompts, metas)
-        while not self.buffer.group_clear():
-            self.rollout_until_harvest()
-            remaining = len(self.buffer.unconsumed()) - len(self.buffer.done())
-            self.train_ready(final=(remaining == 0))
-            self.buffer.check_invariants()
-        self.buffer.advance_group()
-
-
-class CanonicalController:
-    """Baseline: submit a rollout batch, wait for ALL to finish (no early
-    termination — the bubble), then run multiple updates over the same data
-    (off-policy when update_batch < rollout size)."""
+class CanonicalController(RolloutOrchestrator):
+    """Wait-for-all baseline / post-hoc-sort ablation (shim)."""
 
     def __init__(self, engine: EngineProtocol, buffer: StatefulRolloutBuffer,
                  cfg: SortedRLConfig, train_fn: TrainFn,
                  metrics: Optional[RolloutMetrics] = None,
                  sort_post_hoc: bool = False, shuffle_seed: int = 0):
-        self.engine = engine
-        self.buffer = buffer
-        self.cfg = cfg
-        self.train_fn = train_fn
-        self.version = 0
-        self.metrics = metrics or RolloutMetrics(capacity=engine.capacity)
-        self.sort_post_hoc = sort_post_hoc   # ablation §4.4.2
-        self.shuffle_seed = shuffle_seed
-
-    def run_group(self, prompts, metas=None) -> None:
-        import random
-        self.buffer.load_prompts(prompts, metas)
-        while self.buffer.pending() or self.engine.active_uids():
-            free = self.engine.free_slots()
-            if free:
-                batch = self.buffer.pending()[:free]
-                if batch:
-                    self.buffer.mark_running([e.uid for e in batch])
-                    self.engine.submit(batch, self.version)
-                    self.metrics.prompts_prefilled += len(batch)
-            if not self.engine.active_uids():
-                break
-            t0 = self.engine.clock
-            events = self.engine.step()
-            for ev in events:
-                self.buffer.record_tokens(ev.uid, [ev.token], [ev.logprob],
-                                          self.version)
-                if ev.done:
-                    self.buffer.mark_done(ev.uid, ev.finish_reason or "eos")
-            self.metrics.record(len(events), self.engine.clock - t0,
-                                new_tokens=len(events))
-        # all trajectories ready: several (possibly off-policy) updates
-        done = self.buffer.done()
-        if self.sort_post_hoc:
-            done = sorted(done, key=lambda e: e.gen_len)
-        else:
-            rng = random.Random(self.shuffle_seed + self.version)
-            done = list(done)
-            rng.shuffle(done)
-        for i in range(0, len(done), self.cfg.update_batch):
-            batch = done[i:i + self.cfg.update_batch]
-            if len(batch) < self.cfg.update_batch and not self.cfg.train_leftover:
-                break
-            entries = self.buffer.consume([e.uid for e in batch])
-            self.train_fn(entries, self.version)
-            self.version += 1
-            self.engine.sync_weights(self.version)
-            self.metrics.updates += 1
-        self.buffer.advance_group()
+        policy = (PostHocSortPolicy(shuffle_seed=shuffle_seed)
+                  if sort_post_hoc else
+                  BaselinePolicy(shuffle_seed=shuffle_seed))
+        super().__init__(engine, buffer, cfg, policy,
+                         _wrap_legacy(train_fn), metrics)
+        self.sort_post_hoc = sort_post_hoc
 
 
-class UngroupedController(SortedRLController):
-    """Ablation §4.4.2 «disabled grouped rollout»: oversubscription and
-    shortest-first harvesting WITHOUT the group barrier — new prompts are
-    admitted whenever slots free up, so short responses dominate and long
-    prompts starve (the collapse the paper shows)."""
+class UngroupedController(RolloutOrchestrator):
+    """No-group-barrier ablation §4.4.2 (shim)."""
 
-    def __init__(self, *args, prompt_stream=None, **kw):
-        super().__init__(*args, **kw)
-        self.prompt_stream = prompt_stream   # iterator of (prompt, meta)
+    def __init__(self, engine: EngineProtocol, buffer: StatefulRolloutBuffer,
+                 cfg: SortedRLConfig, train_fn: TrainFn,
+                 metrics: Optional[RolloutMetrics] = None,
+                 prompt_stream=None, fill_policy: str = "resume_first"):
+        super().__init__(engine, buffer, cfg,
+                         UngroupedPolicy(prompt_stream=prompt_stream,
+                                         fill_policy=fill_policy),
+                         _wrap_legacy(train_fn), metrics)
 
-    def _fill_engine(self) -> None:
-        free = self.engine.free_slots()
-        have = len(self.buffer.pending())
-        # keep pulling fresh prompts — no group barrier
-        while self.prompt_stream is not None and have < free:
-            try:
-                prompt, meta = next(self.prompt_stream)
-            except StopIteration:
-                break
-            self.buffer.load_prompts([prompt], [meta])
-            have += 1
-        super()._fill_engine()
-
-    def run_steps(self, n_updates: int) -> None:
-        while self.metrics.updates < n_updates:
-            self.rollout_until_harvest()
-            self.train_ready(final=False)
-            if not self.buffer.unconsumed() and self.prompt_stream is None:
-                break
+    @property
+    def prompt_stream(self):
+        return self.policy.prompt_stream
 
 
-class PipelinedController(SortedRLController):
-    """BEYOND-PAPER extension: relaxed group barrier.
+class PipelinedController(RolloutOrchestrator):
+    """Beyond-paper relaxed group barrier (shim)."""
 
-    The paper's grouped loading leaves a drain bubble at each group tail
-    (the last update_batch of stragglers can't fill the engine).  This
-    controller admits prompts of group g+1 into otherwise-idle slots while
-    group g stragglers finish.  Group-g entries still train before any
-    group-g+1 entry (consume order is by lifecycle), so the curriculum and
-    no-starvation guarantees are preserved; only the strict "no new prompts
-    until clear" rule is relaxed.  Measured in benchmarks/bench_throughput
-    as the beyond-paper row.
-    """
+    def __init__(self, engine: EngineProtocol, buffer: StatefulRolloutBuffer,
+                 cfg: SortedRLConfig, train_fn: TrainFn,
+                 metrics: Optional[RolloutMetrics] = None,
+                 lookahead: int = 1):
+        super().__init__(engine, buffer, cfg,
+                         PipelinedPolicy(lookahead=lookahead),
+                         _wrap_legacy(train_fn), metrics)
 
-    def __init__(self, *args, lookahead: int = 1, **kw):
-        super().__init__(*args, **kw)
-        self.lookahead = lookahead
-        self._next_groups: List = []   # queued (prompts, metas)
-
-    def queue_group(self, prompts, metas=None):
-        self._next_groups.append((list(prompts), metas))
-
-    def _fill_engine(self) -> None:
-        free = self.engine.free_slots()
-        pending = len(self.buffer.pending())
-        # admit next-group prompts only into slots the current group
-        # cannot fill
-        while (free > pending and self._next_groups
-               and self.buffer.group_epoch_load_allowed()):
-            prompts, metas = self._next_groups[0]
-            take = min(free - pending, len(prompts))
-            self.buffer.load_prompts_next_group(prompts[:take],
-                                                (metas[:take] if metas else None))
-            del prompts[:take]
-            if metas:
-                del metas[:take]
-            if not prompts:
-                self._next_groups.pop(0)
-            pending += take
-        super()._fill_engine()
-
-    def run_queued(self) -> None:
-        """Process every queued group to consumption."""
-        while self._next_groups or self.buffer.unconsumed():
-            if not self.buffer.unconsumed() and self._next_groups:
-                prompts, metas = self._next_groups.pop(0)
-                if prompts:
-                    self.buffer.load_prompts(prompts, metas)
-                continue
-            self.rollout_until_harvest()
-            remaining = (len(self.buffer.unconsumed())
-                         - len(self.buffer.done()))
-            self.train_ready(final=(remaining == 0))
-            self.buffer.check_invariants()
-            if self.buffer.current_group_clear() and not self.buffer.group_clear():
-                self.buffer.advance_group(strict=False)
-            elif self.buffer.group_clear():
-                self.buffer.advance_group()
-
-    def _train_order_key(self, e: BufferEntry):
-        # strictly lifecycle-ordered so group g trains before group g+1
-        # (curriculum preserved)
-        return (e.lifecycle, e.gen_len)
+    def queue_group(self, prompts, metas=None) -> None:
+        self.policy.queue_group(prompts, metas)

@@ -20,6 +20,7 @@ class RolloutMetrics:
     tokens_discarded: int = 0       # on-policy scavenging waste
     harvests: int = 0
     updates: int = 0
+    updates_gated: int = 0          # batches vetoed by policy.update_gate
 
     def record(self, running: int, dt: float, new_tokens: int = 0) -> None:
         if dt > 0:
@@ -52,6 +53,7 @@ class RolloutMetrics:
         self.tokens_discarded += other.tokens_discarded
         self.harvests += other.harvests
         self.updates += other.updates
+        self.updates_gated += other.updates_gated
 
     def summary(self) -> dict:
         return {
@@ -62,4 +64,5 @@ class RolloutMetrics:
             "tokens_discarded": self.tokens_discarded,
             "harvests": self.harvests,
             "updates": self.updates,
+            "updates_gated": self.updates_gated,
         }

@@ -1,0 +1,282 @@
+"""Rollout orchestration mechanics (paper §3.1 Fig. 2a), policy-agnostic.
+
+One :class:`RolloutOrchestrator` owns everything the old controller family
+re-implemented four times: engine feeding (oversubscription), decode-event
+plumbing, early termination + scavenging, utilisation metrics, trainer
+hand-off, weight sync, and group advancement.  Strategy differences live
+entirely in a :class:`~repro.core.policy.SchedulerPolicy`:
+
+    policy = make_policy("sorted")
+    orch = RolloutOrchestrator(engine, buffer, cfg, policy, train_fn)
+    orch.run_group(prompts, metas)
+
+The trainer hand-off is typed: ``train_fn`` receives an
+:class:`UpdateRequest` (entries, trainer version, group epoch, per-batch
+staleness stats) and may return an :class:`UpdateResult`.  Before each
+hand-off the policy's ``update_gate`` may veto the batch (PipelineRL-style
+staleness cap); vetoed batches are consumed but not trained.
+
+Entry points mirror the strategies' driving patterns:
+
+  * ``run_group(prompts)``   — strict grouped loading (sorted / baseline /
+    posthoc_sort / length_binned);
+  * ``run_steps(n_updates)`` — barrier-free streaming (ungrouped);
+  * ``run_queued()``         — relaxed barrier over queued groups
+    (pipelined lookahead).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.buffer import (BufferEntry, EntryState, Mode,
+                               StatefulRolloutBuffer)
+from repro.core.engine_api import EngineProtocol, StepEvent
+from repro.core.metrics import RolloutMetrics
+from repro.core.policy import SchedulerPolicy, SchedView
+
+
+@dataclasses.dataclass
+class SortedRLConfig:
+    """Shared scheduling knobs (formerly on the controller family)."""
+    mode: Mode = Mode.ON_POLICY
+    rollout_batch: int = 128          # b — prompts loaded per batch
+    group_size: int = 4               # n — batches per group (n*b prompts)
+    update_batch: int = 128           # trajectories per trainer update
+    max_gen_len: int = 4096
+    # harvest when this many trajectories are ready (defaults to
+    # update_batch); `None` disables early termination (baseline).
+    harvest_threshold: Optional[int] = None
+    # train on leftover (< update_batch) trajectories at group end
+    train_leftover: bool = True
+
+    def resolved_threshold(self) -> int:
+        return self.harvest_threshold or self.update_batch
+
+
+@dataclasses.dataclass
+class UpdateRequest:
+    """One update batch handed to the trainer."""
+    entries: List[BufferEntry]
+    version: int              # trainer policy version producing this update
+    group_epoch: int
+    final: bool               # leftover batch at group end
+    staleness_mean: float     # mean per-entry staleness vs `version`
+    staleness_max: float
+
+
+@dataclasses.dataclass
+class UpdateResult:
+    """Trainer feedback for one update (losses, rewards, ...)."""
+    metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+TrainFn = Callable[[UpdateRequest], Optional[UpdateResult]]
+
+
+class RolloutOrchestrator:
+    """Drives any EngineProtocol + StatefulRolloutBuffer under a policy."""
+
+    def __init__(self, engine: EngineProtocol, buffer: StatefulRolloutBuffer,
+                 cfg: SortedRLConfig, policy: SchedulerPolicy,
+                 train_fn: TrainFn,
+                 metrics: Optional[RolloutMetrics] = None):
+        self.engine = engine
+        self.buffer = buffer
+        self.cfg = cfg
+        self.policy = policy
+        self.train_fn = train_fn
+        self.version = 0
+        self.metrics = metrics or RolloutMetrics(capacity=engine.capacity)
+        self.update_results: List[UpdateResult] = []
+        # skip the per-step view build when the policy never admits
+        from repro.core.policy import BasePolicy
+        self._policy_admits = (getattr(type(policy), "admit_next_group", None)
+                               is not BasePolicy.admit_next_group)
+
+    # -- scheduling snapshot -------------------------------------------------
+
+    def _view(self, harvest_threshold: int = 0) -> SchedView:
+        # single pass over the buffer: state counts, current-epoch
+        # variants, and the lookahead budget all come from one scan (this
+        # runs every decode step)
+        p = r = d = d_cur = u_cur = 0
+        load_ok = True
+        epoch = self.buffer.group_epoch
+        for e in self.buffer.entries.values():
+            s = e.state
+            if s == EntryState.PENDING:
+                p += 1
+            elif s == EntryState.RUNNING:
+                r += 1
+            elif s == EntryState.DONE:
+                d += 1
+                if e.lifecycle <= epoch:
+                    d_cur += 1
+            else:
+                continue
+            if e.lifecycle <= epoch:
+                u_cur += 1
+            elif e.lifecycle > epoch + 1:
+                load_ok = False
+        return SchedView(
+            pending=p, running=r, done=d, unconsumed=p + r + d,
+            free_slots=self.engine.free_slots(),
+            capacity=self.engine.capacity,
+            group_epoch=epoch,
+            version=self.version,
+            update_batch=self.cfg.update_batch,
+            harvest_threshold=harvest_threshold,
+            next_epoch_load_allowed=load_ok,
+            done_current=d_cur, unconsumed_current=u_cur)
+
+    # -- engine feeding ------------------------------------------------------
+
+    def _admit(self) -> None:
+        if not self._policy_admits:
+            return
+        req = self.policy.admit_next_group(self._view())
+        if req is None or not req.prompts:
+            return
+        if req.next_epoch:
+            self.buffer.load_prompts_next_group(req.prompts, req.metas)
+        else:
+            self.buffer.load_prompts(req.prompts, req.metas)
+
+    def _fill_engine(self) -> None:
+        self._admit()
+        free = self.engine.free_slots()
+        if free <= 0:
+            return
+        batch = self.policy.select_fill(self.buffer.pending(), free)
+        if not batch:
+            return
+        self.buffer.mark_running([e.uid for e in batch])
+        self.engine.submit(batch, self.version)
+        self.metrics.prompts_prefilled += len(batch)
+
+    # -- event plumbing ------------------------------------------------------
+
+    def _apply_events(self, events: Sequence[StepEvent], t0: float) -> None:
+        for ev in events:
+            self.buffer.record_tokens(ev.uid, [ev.token], [ev.logprob],
+                                      self.version)
+            if ev.done:
+                self.buffer.mark_done(ev.uid, ev.finish_reason or "eos")
+        dt = self.engine.clock - t0
+        self.metrics.record(len(events), dt, new_tokens=len(events))
+
+    # -- one rollout iteration: decode until harvest -------------------------
+
+    def rollout_until_harvest(self) -> None:
+        threshold = min(self.cfg.resolved_threshold(),
+                        len(self.buffer.unconsumed()))
+        while True:
+            self._fill_engine()
+            if not self.engine.active_uids():
+                break
+            t0 = self.engine.clock
+            events = self.engine.step()
+            self._apply_events(events, t0)
+            if self.policy.harvest_now(self._view(threshold)):
+                break
+        if not self.policy.early_termination:
+            return   # wait-for-all: the loop above drained the engine
+        # early termination of stragglers (both modes; on-policy discards)
+        interrupted = self.engine.interrupt()
+        for uid in interrupted:
+            e = self.buffer.entries[uid]
+            if self.buffer.mode == Mode.ON_POLICY:
+                self.metrics.tokens_discarded += e.gen_len
+            self.buffer.scavenge(uid)
+        self.metrics.harvests += 1
+
+    # -- training ------------------------------------------------------------
+
+    def train_ready(self, final: bool = False) -> int:
+        """Order DONE trajectories per the policy and feed the trainer in
+        update_batch batches.  Returns number of updates performed."""
+        ready = self.policy.order_ready(self.buffer.done(), self._view())
+        n_updates = 0
+        while len(ready) >= self.cfg.update_batch or (
+                final and ready and self.cfg.train_leftover):
+            batch = ready[:self.cfg.update_batch]
+            ready = ready[len(batch):]
+            entries = self.buffer.consume([e.uid for e in batch])
+            req = self._update_request(entries, final and not ready)
+            if not self.policy.update_gate(req):
+                self.metrics.updates_gated += 1
+                continue
+            result = self.train_fn(req)
+            if result is not None:
+                self.update_results.append(result)
+            self.version += 1
+            self.engine.sync_weights(self.version)
+            self.metrics.updates += 1
+            n_updates += 1
+        return n_updates
+
+    def _update_request(self, entries: List[BufferEntry],
+                        final: bool) -> UpdateRequest:
+        stales = [e.staleness(self.version) for e in entries]
+        return UpdateRequest(
+            entries=entries, version=self.version,
+            group_epoch=self.buffer.group_epoch, final=final,
+            staleness_mean=sum(stales) / len(stales) if stales else 0.0,
+            staleness_max=max(stales, default=0.0))
+
+    # -- driving patterns -----------------------------------------------------
+
+    def run_group(self, prompts: Sequence[Sequence[int]],
+                  metas: Optional[Sequence] = None) -> None:
+        """Process one group of n*b prompts to full consumption (strict
+        grouped loading, paper §3.1 step 5)."""
+        assert self.buffer.group_clear(), "previous group not consumed"
+        self.buffer.load_prompts(prompts, metas)
+        while not self.buffer.group_clear():
+            self.rollout_until_harvest()
+            remaining = len(self.buffer.unconsumed()) - len(self.buffer.done())
+            self.train_ready(final=(remaining == 0))
+            self.buffer.check_invariants()
+        self.buffer.advance_group()
+
+    def run_steps(self, n_updates: int) -> None:
+        """Barrier-free driving (ungrouped ablation): keep harvesting and
+        training until `n_updates` updates or the prompt source dries up."""
+        while self.metrics.updates < n_updates:
+            self.rollout_until_harvest()
+            n = self.train_ready(final=False)
+            if getattr(self.policy, "prompt_stream", None) is not None:
+                continue   # more prompts may still arrive
+            if not self.buffer.unconsumed():
+                break
+            if n == 0 and not (self.buffer.pending() or
+                               self.buffer.running()):
+                break   # leftover smaller than update_batch; final never
+                        # comes without a group barrier
+
+    def run_queued(self) -> None:
+        """Process every policy-queued group to consumption (pipelined
+        lookahead: next-group prompts fill otherwise-idle slots)."""
+        policy = self.policy
+        assert hasattr(policy, "has_queued"), \
+            f"policy {policy.name!r} does not queue groups"
+        while policy.has_queued() or self.buffer.unconsumed():
+            if not self.buffer.unconsumed() and policy.has_queued():
+                prompts, metas = policy.pop_group()
+                if prompts:
+                    self.buffer.load_prompts(prompts, metas)
+                continue
+            self.rollout_until_harvest()
+            # `final` judged on the CURRENT epoch: next-group entries in
+            # flight must not block the current group's leftover batch
+            epoch = self.buffer.group_epoch
+            remaining = sum(1 for e in self.buffer.unconsumed()
+                            if e.lifecycle <= epoch
+                            and e.state != EntryState.DONE)
+            self.train_ready(final=(remaining == 0))
+            self.buffer.check_invariants()
+            if self.buffer.current_group_clear() and not self.buffer.group_clear():
+                self.buffer.advance_group(strict=False)
+            elif self.buffer.group_clear():
+                self.buffer.advance_group()

@@ -1,0 +1,356 @@
+"""One-call RL session builder: task generator -> engine -> buffer ->
+orchestrator -> trainer -> eval from a single declarative config.
+
+This replaces the two near-duplicate ~140-line drivers that used to live
+in ``repro.train.loop`` (``run_logic_rl`` / ``run_math_rl``, kept there as
+thin wrappers).  The session is task- and policy-agnostic: tasks come from
+the :data:`TASKS` registry, scheduling strategies from the
+:mod:`repro.core.policy` registry, and the rollout engine is either the
+real JAX :class:`~repro.rollout.engine.SlotEngine` (``engine="slot"``) or
+the discrete-event :class:`~repro.rollout.sim.SimEngine`
+(``engine="sim"``, scheduling-only — no model, trainer, or eval).
+
+    from repro.rl.session import RLSession, SessionConfig
+    out = RLSession.from_config(SessionConfig(task="logic",
+                                              policy="sorted")).run()
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AttnConfig, ModelConfig
+from repro.core.buffer import BufferEntry, Mode, StatefulRolloutBuffer
+from repro.core.orchestrator import (RolloutOrchestrator, SortedRLConfig,
+                                     UpdateRequest, UpdateResult)
+from repro.core.policy import make_policy
+from repro.data import logic, math_synth
+from repro.data.loader import GroupedLoader, TaskGenerator
+from repro.data.tokenizer import Vocab
+from repro.models.model import Model, build_model
+from repro.rl.losses import LossConfig
+from repro.rl.trainer import RLTrainer
+from repro.rollout.engine import SlotEngine
+from repro.rollout.sim import SimEngine
+from repro.train.optimizer import AdamWConfig
+
+
+def tiny_lm_config(vocab_size: int, d_model: int = 128, layers: int = 4,
+                   heads: int = 4) -> ModelConfig:
+    return ModelConfig(
+        name="tiny-lm", family="dense", num_layers=layers, d_model=d_model,
+        num_heads=heads, num_kv_heads=heads, d_ff=4 * d_model,
+        vocab_size=vocab_size, attn=AttnConfig(rope_theta=10_000.0),
+        tie_embeddings=True, param_dtype=jnp.float32,
+        compute_dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# SFT warm-up (plays the role of starting from an instruct checkpoint)
+# ---------------------------------------------------------------------------
+
+def sft_warmup(model: Model, params, examples: Sequence[Tuple[List[int],
+                                                              List[int]]],
+               pad_id: int, steps: int = 200, batch_size: int = 32,
+               lr: float = 1e-3, seed: int = 0, width: int = 96):
+    from repro.train.optimizer import adamw_update, init_opt_state
+    opt_cfg = AdamWConfig(lr=lr, grad_clip=1.0)
+    opt_state = init_opt_state(params, opt_cfg)
+    rng = np.random.RandomState(seed)
+
+    def loss_fn(p, tokens, mask):
+        logits, _ = model.forward(p, {"tokens": tokens})
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        tgt = tokens[:, 1:]
+        lp_t = jnp.take_along_axis(lp[:, :-1], tgt[:, :, None], 2)[..., 0]
+        m = mask[:, 1:]
+        return -(lp_t * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+    @jax.jit
+    def step_fn(p, o, tokens, mask):
+        loss, grads = jax.value_and_grad(loss_fn)(p, tokens, mask)
+        p, o, _ = adamw_update(p, grads, o, opt_cfg)
+        return p, o, loss
+
+    losses = []
+    for s in range(steps):
+        idx = rng.randint(0, len(examples), batch_size)
+        toks = np.full((batch_size, width), pad_id, np.int32)
+        mask = np.zeros((batch_size, width), np.float32)
+        for i, j in enumerate(idx):
+            prompt, target = examples[j]
+            seq = (prompt + target)[:width]
+            toks[i, :len(seq)] = seq
+            mask[i, len(prompt):len(seq)] = 1.0
+        params, opt_state, loss = step_fn(params, opt_state,
+                                          jnp.asarray(toks),
+                                          jnp.asarray(mask))
+        losses.append(float(loss))
+    return params, losses
+
+
+# ---------------------------------------------------------------------------
+# Evaluation: greedy decode through the engine
+# ---------------------------------------------------------------------------
+
+def evaluate(model: Model, params, vocab: Vocab, prompts, metas,
+             reward_fn, max_gen: int = 24, max_total: int = 128) -> Dict:
+    eng = SlotEngine(model, lambda: params, capacity=len(prompts),
+                     max_total_len=max_total, max_gen_len=max_gen,
+                     eos_id=vocab.eos_id, pad_id=vocab.pad_id,
+                     temperature=0.0)
+    entries = [BufferEntry(uid=i, prompt=list(p), meta=m)
+               for i, (p, m) in enumerate(zip(prompts, metas))]
+    eng.submit(entries, version=0)
+    gen: Dict[int, List[int]] = {e.uid: [] for e in entries}
+    while eng.active_uids():
+        for ev in eng.step():
+            gen[ev.uid].append(ev.token)
+    rewards = [reward_fn(gen[e.uid], e.meta) for e in entries]
+    return {
+        "reward_mean": float(np.mean(rewards)),
+        "solve_rate": float(np.mean([r >= 1.2 for r in rewards])),
+        "gen_len_mean": float(np.mean([len(g) for g in gen.values()])),
+    }
+
+
+# ---------------------------------------------------------------------------
+# task registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TaskSpec:
+    """A verifiable task: vocab + generator factory + rule-based verifier."""
+    vocab: Vocab
+    make_generator: Callable[[int], TaskGenerator]
+    verify: Callable[[Sequence[int], Any, Vocab], float]
+    sft_width: int        # warm-up padding width (task-shaped)
+
+
+TASKS: Dict[str, TaskSpec] = {
+    "logic": TaskSpec(logic.VOCAB,
+                      lambda seed: logic.LogicTaskGenerator(seed=seed),
+                      logic.verify, sft_width=96),
+    "math": TaskSpec(math_synth.MATH_VOCAB,
+                     lambda seed: math_synth.MathTaskGenerator(seed=seed),
+                     math_synth.verify, sft_width=64),
+}
+
+
+# ---------------------------------------------------------------------------
+# session config + builder
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SessionConfig:
+    """Declarative description of a full RL run."""
+    task: str = "logic"               # TASKS registry key
+    policy: str = "sorted"            # scheduling-policy registry key
+    policy_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    engine: str = "slot"              # slot (real decode) | sim (scheduling)
+    mode: Mode = Mode.ON_POLICY
+    rollout_batch: int = 32           # engine capacity (slots)
+    group_size: int = 2
+    update_batch: int = 32
+    max_gen_len: int = 24
+    max_total_len: int = 160
+    n_groups: int = 4
+    sft_steps: int = 150
+    lr: float = 3e-4
+    temperature: float = 1.0
+    seed: int = 0
+    d_model: int = 128
+    layers: int = 4
+    eval_every: int = 4               # updates between evals
+    eval_size: int = 64
+    # paper LogicRL setting: k responses per prompt (duplicated entries
+    # sharing prompt_id -> grpo groups or reinforce++ batch stats)
+    responses_per_prompt: int = 1
+    advantage_kind: str = "reinforce_pp"   # reinforce_pp | grpo
+    harvest_threshold: Optional[int] = None
+    train_leftover: bool = True
+    sim_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+class RLSession:
+    """A fully-wired RL run; build with :meth:`from_config`, drive with
+    :meth:`run` (or step the parts manually via the public attributes)."""
+
+    def __init__(self, cfg: SessionConfig, orchestrator: RolloutOrchestrator,
+                 loader: GroupedLoader, vocab: Vocab,
+                 model: Optional[Model] = None,
+                 trainer: Optional[RLTrainer] = None,
+                 reward_fn: Optional[Callable] = None,
+                 eval_set: Optional[Tuple[List, List]] = None,
+                 sft_losses: Optional[List[float]] = None,
+                 evals: Optional[List[Dict]] = None,
+                 sched_history: Optional[List[Dict]] = None):
+        self.cfg = cfg
+        self.orchestrator = orchestrator
+        self.loader = loader
+        self.vocab = vocab
+        self.model = model
+        self.trainer = trainer
+        self.reward_fn = reward_fn
+        self.eval_set = eval_set
+        self.sft_losses = sft_losses or []
+        self.evals = evals if evals is not None else []
+        self.sched_history = sched_history if sched_history is not None else []
+
+    # convenience pass-throughs
+    @property
+    def engine(self):
+        return self.orchestrator.engine
+
+    @property
+    def buffer(self):
+        return self.orchestrator.buffer
+
+    @property
+    def policy(self):
+        return self.orchestrator.policy
+
+    @property
+    def metrics(self):
+        return self.orchestrator.metrics
+
+    @classmethod
+    def from_config(cls, cfg: SessionConfig) -> "RLSession":
+        if cfg.task not in TASKS:
+            raise KeyError(f"unknown task {cfg.task!r}; "
+                           f"registered: {sorted(TASKS)}")
+        spec = TASKS[cfg.task]
+        vocab = spec.vocab
+        policy = make_policy(cfg.policy, **cfg.policy_kwargs)
+        buffer = StatefulRolloutBuffer(cfg.mode)
+        scfg = SortedRLConfig(mode=cfg.mode, rollout_batch=cfg.rollout_batch,
+                              group_size=cfg.group_size,
+                              update_batch=cfg.update_batch,
+                              max_gen_len=cfg.max_gen_len,
+                              harvest_threshold=cfg.harvest_threshold,
+                              train_leftover=cfg.train_leftover)
+        evals: List[Dict] = []
+        sched_history: List[Dict] = []
+
+        if cfg.engine == "slot":
+            model = build_model(tiny_lm_config(len(vocab), cfg.d_model,
+                                               cfg.layers))
+            params = model.init_params(jax.random.PRNGKey(cfg.seed))
+            gen = spec.make_generator(cfg.seed)
+            sft_examples = [gen.sft_example() for _ in range(2048)]
+            params, sft_losses = sft_warmup(model, params, sft_examples,
+                                            vocab.pad_id,
+                                            steps=cfg.sft_steps,
+                                            seed=cfg.seed,
+                                            width=spec.sft_width)
+            reward_fn = (lambda toks, meta: spec.verify(toks, meta, vocab))
+            trainer = RLTrainer(model, params, reward_fn,
+                                loss_cfg=LossConfig(),
+                                opt_cfg=AdamWConfig(lr=cfg.lr),
+                                pad_id=vocab.pad_id,
+                                max_len=cfg.max_total_len,
+                                advantage_kind=cfg.advantage_kind,
+                                responses_per_prompt=cfg.responses_per_prompt)
+            engine = SlotEngine(model, trainer.params,
+                                capacity=cfg.rollout_batch,
+                                max_total_len=cfg.max_total_len,
+                                max_gen_len=cfg.max_gen_len,
+                                eos_id=vocab.eos_id, pad_id=vocab.pad_id,
+                                temperature=cfg.temperature, seed=cfg.seed)
+            eval_gen = spec.make_generator(9999)
+            eval_set = eval_gen.batch(cfg.eval_size)
+
+            def train_fn(req: UpdateRequest) -> UpdateResult:
+                result = trainer.handle(req)
+                if trainer.state.step % cfg.eval_every == 0:
+                    ev = evaluate(model, trainer.params(), vocab,
+                                  eval_set[0], eval_set[1], reward_fn,
+                                  cfg.max_gen_len, cfg.max_total_len)
+                    ev["step"] = trainer.state.step
+                    evals.append(ev)
+                return result
+
+            orch = RolloutOrchestrator(engine, buffer, scfg, policy,
+                                       train_fn)
+            session = cls(cfg, orch, GroupedLoader(
+                gen, cfg.rollout_batch, cfg.group_size,
+                cfg.responses_per_prompt), vocab, model=model,
+                trainer=trainer, reward_fn=reward_fn, eval_set=eval_set,
+                sft_losses=sft_losses, evals=evals)
+        elif cfg.engine == "sim":
+            # scheduling-only: discrete-event engine, batch-stats trainer
+            gen = spec.make_generator(cfg.seed)
+            engine = SimEngine(capacity=cfg.rollout_batch,
+                               max_gen_len=cfg.max_gen_len, seed=cfg.seed,
+                               **cfg.sim_kwargs)
+
+            def train_fn(req: UpdateRequest) -> UpdateResult:
+                lens = [e.gen_len for e in req.entries]
+                rec = {"entries": len(req.entries),
+                       "gen_len_mean": sum(lens) / len(lens),
+                       "staleness_mean": req.staleness_mean,
+                       "version": req.version}
+                sched_history.append(rec)
+                return UpdateResult(metrics=rec)
+
+            orch = RolloutOrchestrator(engine, buffer, scfg, policy,
+                                       train_fn)
+            session = cls(cfg, orch, GroupedLoader(
+                gen, cfg.rollout_batch, cfg.group_size,
+                cfg.responses_per_prompt), vocab,
+                sched_history=sched_history)
+        else:
+            raise ValueError(f"unknown engine {cfg.engine!r} "
+                             "(expected 'slot' or 'sim')")
+
+        # barrier-free policies stream prompts instead of taking groups
+        if hasattr(policy, "prompt_stream") and policy.prompt_stream is None:
+            policy.prompt_stream = session.loader.stream()
+        return session
+
+    # -- driving ------------------------------------------------------------
+
+    def run(self) -> Dict:
+        """Drive the configured number of groups to consumption and return
+        the result record (history, evals, final eval, rollout metrics)."""
+        cfg = self.cfg
+        orch = self.orchestrator
+        t0 = time.monotonic()
+        if hasattr(self.policy, "queue_group"):         # pipelined lookahead
+            for _ in range(cfg.n_groups):
+                prompts, metas = self.loader.next_group()
+                self.policy.queue_group(prompts, metas)
+            orch.run_queued()
+        elif hasattr(self.policy, "prompt_stream"):     # ungrouped streaming
+            total = cfg.n_groups * self.loader.prompts_per_group
+            orch.run_steps(n_updates=max(1, total // cfg.update_batch))
+        else:                                           # strict grouped
+            for _ in range(cfg.n_groups):
+                prompts, metas = self.loader.next_group()
+                orch.run_group(prompts, metas)
+        wall = round(time.monotonic() - t0, 1)
+
+        out = {
+            "task": cfg.task,
+            "strategy": cfg.policy,
+            "mode": cfg.mode.value,
+            "rollout_metrics": orch.metrics.summary(),
+            "wall_time_s": wall,
+        }
+        if self.trainer is not None:
+            out["sft_loss_final"] = (self.sft_losses[-1]
+                                     if self.sft_losses else None)
+            out["history"] = self.trainer.history
+            out["evals"] = self.evals
+            out["final_eval"] = evaluate(
+                self.model, self.trainer.params(), self.vocab,
+                self.eval_set[0], self.eval_set[1], self.reward_fn,
+                cfg.max_gen_len, cfg.max_total_len)
+        else:
+            out["history"] = self.sched_history
+        return out

@@ -9,6 +9,7 @@ its first tokens' ratios computed against v and the rest against v+1.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -16,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.buffer import BufferEntry
+from repro.core.orchestrator import UpdateRequest, UpdateResult
 from repro.models.model import Model
 from repro.rl import advantages as A
 from repro.rl.losses import LossConfig, total_loss
@@ -34,16 +36,37 @@ RewardFn = Callable[[Sequence[int], object], float]
 
 def entries_to_batch(entries: Sequence[BufferEntry], reward_fn: RewardFn,
                      pad_id: int, max_len: int,
-                     advantage_kind: str = "reinforce_pp",
-                     responses_per_prompt: int = 1,
+                     advantage_kind: str = "reinforce_pp", *,
+                     current_version: Optional[int] = None,
                      ) -> Tuple[Dict[str, jnp.ndarray], Dict[str, float]]:
     """Pad trajectories to a common width and build the update batch.
 
     tokens = [prompt, generated]; loss_mask covers generated tokens;
-    old_logprobs are the buffer's cached behaviour log-probs.
+    old_logprobs are the buffer's cached behaviour log-probs.  Staleness
+    is measured against ``current_version`` — the trainer's policy version
+    at update time (threaded from the orchestrator); entries whose prompt
+    leaves no room for generated tokens are skipped with a warning (they
+    would train on an all-zero loss mask).
     """
-    B = len(entries)
-    width = max(e.total_len for e in entries)
+    kept, skipped = [], []
+    for e in entries:
+        (kept if len(e.prompt) < max_len else skipped).append(e)
+    if skipped:
+        warnings.warn(
+            f"entries_to_batch: skipping {len(skipped)} "
+            f"entr{'y' if len(skipped) == 1 else 'ies'} with prompt >= "
+            f"max_len={max_len} (uids {[e.uid for e in skipped[:8]]}); "
+            f"no generated token fits the update window")
+    if not kept:
+        raise ValueError(
+            f"entries_to_batch: all {len(entries)} entries were skipped "
+            f"(every prompt >= max_len={max_len})")
+    if current_version is None:
+        # fallback: newest version seen in the batch (lower bound)
+        current_version = max((max(e.versions) for e in kept if e.versions),
+                              default=0)
+    B = len(kept)
+    width = max(e.total_len for e in kept)
     width = min(max_len, (width + 31) // 32 * 32)   # bucket: bounded recompiles
     tokens = np.full((B, width), pad_id, np.int32)
     loss_mask = np.zeros((B, width), np.float32)
@@ -51,7 +74,10 @@ def entries_to_batch(entries: Sequence[BufferEntry], reward_fn: RewardFn,
     rewards = np.zeros(B, np.float32)
     staleness = np.zeros(B, np.float32)
     group_ids = np.zeros(B, np.int32)
-    for i, e in enumerate(entries):
+    # dense group indices: responses sharing a prompt_id form one GRPO
+    # group; unrelated prompts never collide
+    gid_of: Dict = {}
+    for i, e in enumerate(kept):
         seq = (list(e.prompt) + list(e.generated))[:width]
         tokens[i, :len(seq)] = seq
         p = min(len(e.prompt), width)
@@ -59,11 +85,13 @@ def entries_to_batch(entries: Sequence[BufferEntry], reward_fn: RewardFn,
         loss_mask[i, p:p + g] = 1.0
         old_lp[i, p:p + g] = e.logprobs[:g]
         rewards[i] = reward_fn(e.generated, e.meta)
-        staleness[i] = e.staleness(max(v for v in e.versions)
-                                   if e.versions else 0)
-        group_ids[i] = getattr(e.meta, "prompt_id", i) % max(
-            1, B // max(1, responses_per_prompt))
+        staleness[i] = e.staleness(current_version)
+        pid = getattr(e.meta, "prompt_id", None)
+        key = pid if pid is not None else ("uid", e.uid)
+        group_ids[i] = gid_of.setdefault(key, len(gid_of))
     lm = jnp.asarray(loss_mask)
+    assert float(loss_mask.sum()) > 0, \
+        "update batch has no trainable tokens (all-zero loss mask)"
     r = jnp.asarray(rewards)
     if advantage_kind == "reinforce_pp":
         adv = A.reinforce_pp(r, lm)
@@ -81,8 +109,11 @@ def entries_to_batch(entries: Sequence[BufferEntry], reward_fn: RewardFn,
     info = {
         "reward_mean": float(rewards.mean()),
         "reward_std": float(rewards.std()),
-        "gen_len_mean": float(np.mean([e.gen_len for e in entries])),
+        "gen_len_mean": float(np.mean([e.gen_len for e in kept])),
         "solve_rate": float(np.mean(rewards >= 1.2)),
+        "staleness_mean": float(staleness.mean()),
+        "staleness_max": float(staleness.max()),
+        "entries_skipped": float(len(skipped)),
     }
     return batch, info
 
@@ -118,6 +149,10 @@ class RLTrainer:
                  pad_id: int = 0, max_len: int = 512,
                  advantage_kind: str = "reinforce_pp",
                  responses_per_prompt: int = 1):
+        # responses_per_prompt is accepted for signature compatibility and
+        # run metadata; GRPO grouping is keyed on meta.prompt_id, so the
+        # loader-level duplication (GroupedLoader) is what actually
+        # produces multi-response groups.
         self.model = model
         self.loss_cfg = loss_cfg or LossConfig()
         self.opt_cfg = opt_cfg or AdamWConfig()
@@ -137,7 +172,7 @@ class RLTrainer:
     def update(self, entries: List[BufferEntry], version: int) -> Dict:
         batch, info = entries_to_batch(
             entries, self.reward_fn, self.pad_id, self.max_len,
-            self.advantage_kind, self.responses_per_prompt)
+            self.advantage_kind, current_version=version)
         params, opt_state, metrics = self._step_jit(
             self.state.params, self.state.opt_state, batch)
         self.state = TrainState(params, opt_state, self.state.step + 1)
@@ -147,3 +182,8 @@ class RLTrainer:
         rec["step"] = self.state.step
         self.history.append(rec)
         return rec
+
+    def handle(self, request: UpdateRequest) -> UpdateResult:
+        """Typed orchestrator entry point (UpdateRequest -> UpdateResult)."""
+        rec = self.update(request.entries, request.version)
+        return UpdateResult(metrics=rec)

@@ -1,119 +1,30 @@
-"""End-to-end RL loop: wires task generator -> SortedRL controller ->
-SlotEngine -> RLTrainer at CPU-trainable scale.  This is the live
-counterpart of the paper's LogicRL experiment (§4.2): a small decoder LM,
-Knights & Knaves puzzles, Reinforce++ with DAPO tricks, and the three
-scheduling strategies (baseline / on-policy / partial).
+"""End-to-end RL loop — back-compat wrappers over the one-call session
+builder.
+
+The two near-duplicate drivers this module used to contain
+(``run_logic_rl`` / ``run_math_rl``) are now a single parameterized
+pipeline in :mod:`repro.rl.session`; each wrapper here just maps the
+historical :class:`RLExperimentConfig` onto a
+:class:`~repro.rl.session.SessionConfig`.  ``tiny_lm_config``,
+``sft_warmup``, and ``evaluate`` also moved there and are re-exported for
+existing imports.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.core.buffer import Mode
+from repro.rl.session import (RLSession, SessionConfig, evaluate,  # noqa: F401
+                              sft_warmup, tiny_lm_config)
 
-from repro.configs.base import AttnConfig, ModelConfig
-from repro.core.buffer import Mode, StatefulRolloutBuffer
-from repro.core.controller import (CanonicalController, SortedRLConfig,
-                                   SortedRLController)
-from repro.data import logic
-from repro.data.tokenizer import Vocab
-from repro.models.model import Model, build_model
-from repro.rl.losses import LossConfig
-from repro.rl.trainer import RLTrainer
-from repro.rollout.engine import SlotEngine
-from repro.train.optimizer import AdamWConfig
+__all__ = ["RLExperimentConfig", "run_logic_rl", "run_math_rl",
+           "tiny_lm_config", "sft_warmup", "evaluate"]
 
-
-def tiny_lm_config(vocab_size: int, d_model: int = 128, layers: int = 4,
-                   heads: int = 4) -> ModelConfig:
-    return ModelConfig(
-        name="tiny-lm", family="dense", num_layers=layers, d_model=d_model,
-        num_heads=heads, num_kv_heads=heads, d_ff=4 * d_model,
-        vocab_size=vocab_size, attn=AttnConfig(rope_theta=10_000.0),
-        tie_embeddings=True, param_dtype=jnp.float32,
-        compute_dtype=jnp.float32)
-
-
-# ---------------------------------------------------------------------------
-# SFT warm-up (plays the role of starting from an instruct checkpoint)
-# ---------------------------------------------------------------------------
-
-def sft_warmup(model: Model, params, examples: Sequence[Tuple[List[int],
-                                                              List[int]]],
-               pad_id: int, steps: int = 200, batch_size: int = 32,
-               lr: float = 1e-3, seed: int = 0, width: int = 96):
-    from repro.train.optimizer import adamw_update, init_opt_state
-    opt_cfg = AdamWConfig(lr=lr, grad_clip=1.0)
-    opt_state = init_opt_state(params, opt_cfg)
-    rng = np.random.RandomState(seed)
-
-    def loss_fn(p, tokens, mask):
-        logits, _ = model.forward(p, {"tokens": tokens})
-        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-        tgt = tokens[:, 1:]
-        lp_t = jnp.take_along_axis(lp[:, :-1], tgt[:, :, None], 2)[..., 0]
-        m = mask[:, 1:]
-        return -(lp_t * m).sum() / jnp.maximum(m.sum(), 1.0)
-
-    @jax.jit
-    def step_fn(p, o, tokens, mask):
-        loss, grads = jax.value_and_grad(loss_fn)(p, tokens, mask)
-        p, o, _ = adamw_update(p, grads, o, opt_cfg)
-        return p, o, loss
-
-    losses = []
-    for s in range(steps):
-        idx = rng.randint(0, len(examples), batch_size)
-        toks = np.full((batch_size, width), pad_id, np.int32)
-        mask = np.zeros((batch_size, width), np.float32)
-        for i, j in enumerate(idx):
-            prompt, target = examples[j]
-            seq = (prompt + target)[:width]
-            toks[i, :len(seq)] = seq
-            mask[i, len(prompt):len(seq)] = 1.0
-        params, opt_state, loss = step_fn(params, opt_state,
-                                          jnp.asarray(toks),
-                                          jnp.asarray(mask))
-        losses.append(float(loss))
-    return params, losses
-
-
-# ---------------------------------------------------------------------------
-# Evaluation: greedy decode through the engine
-# ---------------------------------------------------------------------------
-
-def evaluate(model: Model, params, vocab: Vocab, prompts, metas,
-             reward_fn, max_gen: int = 24, max_total: int = 128) -> Dict:
-    eng = SlotEngine(model, lambda: params, capacity=len(prompts),
-                     max_total_len=max_total, max_gen_len=max_gen,
-                     eos_id=vocab.eos_id, pad_id=vocab.pad_id,
-                     temperature=0.0)
-    from repro.core.buffer import BufferEntry
-    entries = [BufferEntry(uid=i, prompt=list(p), meta=m)
-               for i, (p, m) in enumerate(zip(prompts, metas))]
-    eng.submit(entries, version=0)
-    gen: Dict[int, List[int]] = {e.uid: [] for e in entries}
-    while eng.active_uids():
-        for ev in eng.step():
-            gen[ev.uid].append(ev.token)
-    rewards = [reward_fn(gen[e.uid], e.meta) for e in entries]
-    return {
-        "reward_mean": float(np.mean(rewards)),
-        "solve_rate": float(np.mean([r >= 1.2 for r in rewards])),
-        "gen_len_mean": float(np.mean([len(g) for g in gen.values()])),
-    }
-
-
-# ---------------------------------------------------------------------------
-# Full RL experiment
-# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class RLExperimentConfig:
-    strategy: str = "sorted"          # sorted | baseline | posthoc_sort
+    strategy: str = "sorted"          # any repro.core.policy registry name
     mode: Mode = Mode.ON_POLICY
     rollout_batch: int = 32           # engine capacity (slots)
     group_size: int = 2
@@ -135,145 +46,25 @@ class RLExperimentConfig:
     advantage_kind: str = "reinforce_pp"   # reinforce_pp | grpo
 
 
+def _session_config(cfg: RLExperimentConfig, task: str) -> SessionConfig:
+    return SessionConfig(
+        task=task, policy=cfg.strategy, mode=cfg.mode,
+        rollout_batch=cfg.rollout_batch, group_size=cfg.group_size,
+        update_batch=cfg.update_batch, max_gen_len=cfg.max_gen_len,
+        max_total_len=cfg.max_total_len, n_groups=cfg.n_groups,
+        sft_steps=cfg.sft_steps, lr=cfg.lr, temperature=cfg.temperature,
+        seed=cfg.seed, d_model=cfg.d_model, layers=cfg.layers,
+        eval_every=cfg.eval_every, eval_size=cfg.eval_size,
+        responses_per_prompt=cfg.responses_per_prompt,
+        advantage_kind=cfg.advantage_kind)
+
+
 def run_logic_rl(cfg: RLExperimentConfig) -> Dict:
-    vocab = logic.VOCAB
-    model = build_model(tiny_lm_config(len(vocab), cfg.d_model, cfg.layers))
-    key = jax.random.PRNGKey(cfg.seed)
-    params = model.init_params(key)
+    """Paper §4.2 analog (Knights & Knaves) under any registered policy."""
+    return RLSession.from_config(_session_config(cfg, "logic")).run()
 
-    gen = logic.LogicTaskGenerator(seed=cfg.seed)
-    sft_examples = [gen.sft_example() for _ in range(2048)]
-    params, sft_losses = sft_warmup(model, params, sft_examples,
-                                    vocab.pad_id, steps=cfg.sft_steps,
-                                    seed=cfg.seed)
-
-    reward_fn = lambda toks, meta: logic.verify(toks, meta, vocab)
-    trainer = RLTrainer(model, params, reward_fn,
-                        loss_cfg=LossConfig(),
-                        opt_cfg=AdamWConfig(lr=cfg.lr),
-                        pad_id=vocab.pad_id, max_len=cfg.max_total_len,
-                        advantage_kind=cfg.advantage_kind,
-                        responses_per_prompt=cfg.responses_per_prompt)
-
-    engine = SlotEngine(model, trainer.params, capacity=cfg.rollout_batch,
-                        max_total_len=cfg.max_total_len,
-                        max_gen_len=cfg.max_gen_len, eos_id=vocab.eos_id,
-                        pad_id=vocab.pad_id, temperature=cfg.temperature,
-                        seed=cfg.seed)
-    buffer = StatefulRolloutBuffer(cfg.mode)
-    scfg = SortedRLConfig(mode=cfg.mode, rollout_batch=cfg.rollout_batch,
-                          group_size=cfg.group_size,
-                          update_batch=cfg.update_batch,
-                          max_gen_len=cfg.max_gen_len)
-
-    eval_gen = logic.LogicTaskGenerator(seed=9999)
-    eval_prompts, eval_metas = eval_gen.batch(cfg.eval_size)
-    evals: List[Dict] = []
-
-    def train_fn(entries, version):
-        rec = trainer.update(entries, version)
-        if trainer.state.step % cfg.eval_every == 0:
-            ev = evaluate(model, trainer.params(), vocab, eval_prompts,
-                          eval_metas, reward_fn, cfg.max_gen_len,
-                          cfg.max_total_len)
-            ev["step"] = trainer.state.step
-            evals.append(ev)
-
-    if cfg.strategy == "sorted":
-        ctl = SortedRLController(engine, buffer, scfg, train_fn)
-    else:
-        ctl = CanonicalController(engine, buffer, scfg, train_fn,
-                                  sort_post_hoc=(cfg.strategy
-                                                 == "posthoc_sort"))
-
-    t0 = time.monotonic()
-    for g in range(cfg.n_groups):
-        # equal data across strategies: every group consumes
-        # rollout_batch * group_size prompts (the baseline submits them to
-        # the same-capacity engine and runs group_size off-policy updates,
-        # matching the paper's rollout-512/update-128 setting)
-        n = scfg.rollout_batch * scfg.group_size
-        k = max(1, cfg.responses_per_prompt)
-        prompts, metas = gen.batch(n // k)
-        prompts = [list(p) for p in prompts for _ in range(k)]
-        metas = [m for m in metas for _ in range(k)]
-        ctl.run_group(prompts, metas)
-
-    final_eval = evaluate(model, trainer.params(), vocab, eval_prompts,
-                          eval_metas, reward_fn, cfg.max_gen_len,
-                          cfg.max_total_len)
-    return {
-        "strategy": cfg.strategy,
-        "mode": cfg.mode.value,
-        "sft_loss_final": sft_losses[-1] if sft_losses else None,
-        "history": trainer.history,
-        "evals": evals,
-        "final_eval": final_eval,
-        "rollout_metrics": ctl.metrics.summary(),
-        "wall_time_s": round(time.monotonic() - t0, 1),
-    }
-
-
-# ---------------------------------------------------------------------------
-# Math task variant (paper §4.3 analog, integer-answer verification)
-# ---------------------------------------------------------------------------
 
 def run_math_rl(cfg: RLExperimentConfig) -> Dict:
-    """Same pipeline on the synthetic integer-math task (DAPO-Math analog):
-    exact-match rule-based rewards, deeper expressions -> longer prompts,
-    the same three scheduling strategies."""
-    from repro.data import math_synth
-    vocab = math_synth.MATH_VOCAB
-    model = build_model(tiny_lm_config(len(vocab), cfg.d_model, cfg.layers))
-    key = jax.random.PRNGKey(cfg.seed)
-    params = model.init_params(key)
-
-    gen = math_synth.MathTaskGenerator(seed=cfg.seed)
-    sft_examples = [gen.sft_example() for _ in range(2048)]
-    params, sft_losses = sft_warmup(model, params, sft_examples,
-                                    vocab.pad_id, steps=cfg.sft_steps,
-                                    seed=cfg.seed, width=64)
-
-    reward_fn = lambda toks, meta: math_synth.verify(toks, meta, vocab)
-    trainer = RLTrainer(model, params, reward_fn, loss_cfg=LossConfig(),
-                        opt_cfg=AdamWConfig(lr=cfg.lr),
-                        pad_id=vocab.pad_id, max_len=cfg.max_total_len,
-                        advantage_kind=cfg.advantage_kind,
-                        responses_per_prompt=cfg.responses_per_prompt)
-    engine = SlotEngine(model, trainer.params, capacity=cfg.rollout_batch,
-                        max_total_len=cfg.max_total_len,
-                        max_gen_len=cfg.max_gen_len, eos_id=vocab.eos_id,
-                        pad_id=vocab.pad_id, temperature=cfg.temperature,
-                        seed=cfg.seed)
-    buffer = StatefulRolloutBuffer(cfg.mode)
-    scfg = SortedRLConfig(mode=cfg.mode, rollout_batch=cfg.rollout_batch,
-                          group_size=cfg.group_size,
-                          update_batch=cfg.update_batch,
-                          max_gen_len=cfg.max_gen_len)
-    from repro.data.loader import GroupedLoader
-    loader = GroupedLoader(gen, cfg.rollout_batch, cfg.group_size,
-                           cfg.responses_per_prompt)
-
-    eval_gen = math_synth.MathTaskGenerator(seed=9999)
-    eval_prompts, eval_metas = eval_gen.batch(cfg.eval_size)
-
-    def train_fn(entries, version):
-        trainer.update(entries, version)
-
-    if cfg.strategy == "sorted":
-        ctl = SortedRLController(engine, buffer, scfg, train_fn)
-    else:
-        ctl = CanonicalController(engine, buffer, scfg, train_fn,
-                                  sort_post_hoc=(cfg.strategy
-                                                 == "posthoc_sort"))
-    t0 = time.monotonic()
-    for g in range(cfg.n_groups):
-        prompts, metas = loader.next_group()
-        ctl.run_group(prompts, metas)
-    final_eval = evaluate(model, trainer.params(), vocab, eval_prompts,
-                          eval_metas, reward_fn, cfg.max_gen_len,
-                          cfg.max_total_len)
-    return {"strategy": cfg.strategy, "mode": cfg.mode.value,
-            "history": trainer.history, "final_eval": final_eval,
-            "rollout_metrics": ctl.metrics.summary(),
-            "wall_time_s": round(time.monotonic() - t0, 1)}
+    """Paper §4.3 analog (integer-answer math) under any registered
+    policy."""
+    return RLSession.from_config(_session_config(cfg, "math")).run()

@@ -1,0 +1,229 @@
+"""Policy-conformance suite: the executable contract of SchedulerPolicy.
+
+Every registered policy (repro.core.policy registry) is driven by the
+shared RolloutOrchestrator against BOTH the discrete-event SimEngine and
+a tiny-model SlotEngine (real JAX decode), so a new registry entry
+inherits the whole contract:
+
+  * conservation — every prompt loaded into a group run is trained
+    exactly once (streaming policies: trained uids are unique and no
+    admitted entry is silently dropped);
+  * curriculum ordering — update batches are monotone in the policy's
+    ``train_order_key`` whenever the policy declares ``ordered_training``;
+  * no-starvation — the workload drains: the engine ends empty, the
+    buffer ends clear, and every update the workload owes is delivered;
+  * group barrier — trained lifecycles never decrease (group g trains
+    before group g+1); strict policies never mix epochs inside a run.
+
+Also pins the update-gate mechanics (PipelineRL-style staleness cap):
+vetoed batches are consumed-but-untrained and counted in
+``metrics.updates_gated``, without breaking conservation of consumption.
+"""
+import pytest
+
+from engine_conformance import make_slot
+from repro.core.buffer import EntryState, Mode, StatefulRolloutBuffer
+from repro.core.orchestrator import (RolloutOrchestrator, SortedRLConfig,
+                                     UpdateRequest)
+from repro.core.policy import (SchedulerPolicy, available_policies,
+                               make_policy)
+from repro.rollout.sim import SimEngine, lognormal_lengths
+
+CAPACITY = 4
+MAX_GEN = 6
+GROUP = 2
+N_PROMPTS = CAPACITY * GROUP            # one group
+
+
+def make_sim_varied():
+    # short-median sampler so generation lengths actually vary in [1, 6]
+    return SimEngine(capacity=CAPACITY, max_gen_len=MAX_GEN, seed=0,
+                     length_sampler=lognormal_lengths(median=3, sigma=0.8,
+                                                      max_len=MAX_GEN))
+
+
+def make_slot_varied():
+    # real eos id: sampled decode finishes early sometimes (varied lengths)
+    from repro.data import logic
+    return make_slot(eos_id=logic.VOCAB.eos_id)
+
+
+ENGINE_FACTORIES = {"sim": make_sim_varied, "slot": make_slot_varied}
+
+
+def prompts(n, start=0):
+    return [[1, 1, 1, 2 + (start + i) % 5] for i in range(n)]
+
+
+def build(policy_name, engine_name, mode=Mode.PARTIAL, **policy_kwargs):
+    eng = ENGINE_FACTORIES[engine_name]()
+    buf = StatefulRolloutBuffer(mode)
+    cfg = SortedRLConfig(mode=mode, rollout_batch=CAPACITY,
+                         group_size=GROUP, update_batch=CAPACITY,
+                         max_gen_len=MAX_GEN)
+    policy = make_policy(policy_name, **policy_kwargs)
+    batches = []
+
+    def train_fn(req: UpdateRequest):
+        batches.append((list(req.entries), req.group_epoch))
+
+    return RolloutOrchestrator(eng, buf, cfg, policy, train_fn), batches
+
+
+_DRIVE_CACHE = {}
+
+
+def drive(policy_name, engine_name, n_groups=2):
+    """Run `n_groups` groups' worth of work in the policy's native driving
+    pattern (memoized — the run is deterministic and the invariant tests
+    only read); returns (orchestrator, trained batches, loaded prompt
+    count)."""
+    key = (policy_name, engine_name, n_groups)
+    if key not in _DRIVE_CACHE:
+        _DRIVE_CACHE[key] = _drive(policy_name, engine_name, n_groups)
+    return _DRIVE_CACHE[key]
+
+
+def _drive(policy_name, engine_name, n_groups):
+    if policy_name == "ungrouped":
+        stream = iter([(p, None) for p in prompts(n_groups * N_PROMPTS)])
+        orch, batches = build(policy_name, engine_name,
+                              prompt_stream=stream)
+        orch.run_steps(n_updates=n_groups * GROUP)
+        loaded = len(orch.buffer.entries)   # never advances groups
+    elif policy_name == "pipelined":
+        orch, batches = build(policy_name, engine_name)
+        for g in range(n_groups):
+            orch.policy.queue_group(prompts(N_PROMPTS, start=g))
+        orch.run_queued()
+        loaded = n_groups * N_PROMPTS
+    else:
+        orch, batches = build(policy_name, engine_name)
+        for g in range(n_groups):
+            orch.run_group(prompts(N_PROMPTS, start=g))
+        loaded = n_groups * N_PROMPTS
+    return orch, batches, loaded
+
+
+@pytest.fixture(params=sorted(ENGINE_FACTORIES))
+def engine_name(request):
+    return request.param
+
+
+@pytest.fixture(params=available_policies())
+def policy_name(request):
+    return request.param
+
+
+# -- registry surface ---------------------------------------------------------
+
+def test_registry_contract():
+    names = available_policies()
+    # the four paper strategies + the beyond-paper pipelined variant must
+    # all be selectable by name
+    for required in ("sorted", "baseline", "posthoc_sort", "ungrouped",
+                     "pipelined"):
+        assert required in names
+    for name in names:
+        p = make_policy(name)
+        assert isinstance(p, SchedulerPolicy)
+        assert p.name == name
+    with pytest.raises(KeyError):
+        make_policy("no_such_policy")
+
+
+# -- the four invariants, every policy x both engines -------------------------
+
+def test_conservation(policy_name, engine_name):
+    orch, batches, loaded = drive(policy_name, engine_name)
+    uids = [e.uid for b, _ in batches for e in b]
+    assert len(uids) == len(set(uids)), "an entry trained twice"
+    if policy_name == "ungrouped":
+        # streaming: trained == consumed; everything else admitted is
+        # still live in the buffer (nothing silently dropped)
+        consumed = {u for u, e in orch.buffer.entries.items()
+                    if e.state == EntryState.CONSUMED}
+        assert set(uids) == consumed
+        assert len(uids) + sum(
+            e.state != EntryState.CONSUMED
+            for e in orch.buffer.entries.values()) == loaded
+    else:
+        assert sorted(uids) == list(range(loaded)), \
+            "every loaded prompt must be trained exactly once"
+
+
+def test_curriculum_ordering(policy_name, engine_name):
+    orch, batches, _ = drive(policy_name, engine_name)
+    assert batches, "policy produced no updates"
+    policy = orch.policy
+    if not policy.ordered_training:
+        return   # baseline shuffles by design
+    for b, _ in batches:
+        keys = [policy.train_order_key(e) for e in b]
+        assert keys == sorted(keys), \
+            f"batch not monotone in train_order_key: {keys}"
+
+
+def test_no_starvation(policy_name, engine_name):
+    orch, batches, loaded = drive(policy_name, engine_name)
+    # the engine must end drained and the workload must not wedge
+    assert orch.engine.free_slots() == orch.engine.capacity
+    if policy_name == "ungrouped":
+        return   # starves long prompts by design (the §4.4.2 collapse)
+    assert orch.buffer.group_clear()
+    trained = [e for b, _ in batches for e in b]
+    assert len(trained) == loaded
+    # every owed update was delivered (update_batch divides the workload);
+    # relaxed-barrier policies may split leftovers at group boundaries
+    delivered = orch.metrics.updates + orch.metrics.updates_gated
+    if orch.policy.strict_group_barrier:
+        assert delivered == loaded // CAPACITY
+    else:
+        assert delivered >= loaded // CAPACITY
+
+
+def test_group_barrier(policy_name, engine_name):
+    orch, batches, _ = drive(policy_name, engine_name)
+    if policy_name == "ungrouped":
+        return   # explicitly barrier-free
+    lifecycles = [e.lifecycle for b, _ in batches for e in b]
+    assert lifecycles == sorted(lifecycles), \
+        "a later group trained before an earlier one"
+    if orch.policy.strict_group_barrier:
+        for b, epoch in batches:
+            assert all(e.lifecycle == epoch for e in b), \
+                "strict policy mixed group epochs inside a run"
+
+
+def test_buffer_invariants_throughout(policy_name, engine_name):
+    orch, _, _ = drive(policy_name, engine_name)
+    orch.buffer.check_invariants()
+
+
+# -- update-gate mechanics (PipelineRL-style off-policy cap) ------------------
+
+def test_update_gate_consumes_without_training():
+    # max_staleness=-1: every non-final batch is "too stale" and vetoed
+    orch, batches = build("length_binned", "sim", max_staleness=-1.0)
+    orch.run_group(prompts(N_PROMPTS))
+    assert orch.metrics.updates_gated > 0
+    assert orch.metrics.updates + orch.metrics.updates_gated == GROUP
+    # conservation of consumption holds even for vetoed batches
+    assert orch.buffer.group_clear()
+    trained = [e for b, _ in batches for e in b]
+    assert len(trained) < N_PROMPTS           # something was vetoed
+    # version only advances on trained updates
+    assert orch.version == orch.metrics.updates
+
+
+def test_gate_passes_when_within_cap():
+    orch, batches = build("length_binned", "sim", max_staleness=1e9)
+    orch.run_group(prompts(N_PROMPTS))
+    assert orch.metrics.updates_gated == 0
+    assert sum(len(b) for b, _ in batches) == N_PROMPTS
+
+
+def test_ungrouped_without_stream_terminates():
+    orch, batches = build("ungrouped", "sim", prompt_stream=None)
+    orch.run_steps(n_updates=3)     # no stream, no prompts: returns
+    assert batches == []

@@ -110,6 +110,73 @@ def test_whiten_property(seed):
     assert abs(var - 1.0) < 1e-2
 
 
+def test_staleness_vs_trainer_version():
+    """Partial mode: staleness must be measured against the TRAINER's
+    current version (threaded from the orchestrator), not the entry's own
+    newest version — the latter under-reports it as ~0."""
+    from repro.core.buffer import BufferEntry
+    from repro.rl.trainer import entries_to_batch
+
+    e = BufferEntry(uid=0, prompt=[1, 2], meta=None,
+                    generated=[3, 4, 5], logprobs=[-0.5, -0.6, -0.1],
+                    versions=[0, 0, 1])
+    _, info = entries_to_batch([e], lambda g, m: 1.0, pad_id=0, max_len=32,
+                               current_version=3)
+    # mean over tokens of (3-0, 3-0, 3-1) = 8/3
+    assert abs(info["staleness_mean"] - 8 / 3) < 1e-6
+    assert abs(info["staleness_max"] - 8 / 3) < 1e-6
+    # the old buggy reference point (own max version) under-reports: 2/3
+    _, info0 = entries_to_batch([e], lambda g, m: 1.0, pad_id=0, max_len=32,
+                                current_version=1)
+    assert abs(info0["staleness_mean"] - 2 / 3) < 1e-6
+
+
+def test_grpo_group_ids_dense():
+    """Responses sharing a prompt_id form one group; unrelated prompts
+    must never collide (the old modulo mapping folded prompt ids 0 and B
+    into the same group)."""
+    import types
+
+    from repro.core.buffer import BufferEntry
+    from repro.rl.trainer import entries_to_batch
+
+    def entry(uid, pid, reward):
+        meta = types.SimpleNamespace(prompt_id=pid, reward=reward)
+        return BufferEntry(uid=uid, prompt=[1], meta=meta,
+                           generated=[2, 3], logprobs=[-1.0, -1.0],
+                           versions=[0, 0])
+
+    # prompt ids 100 and 104 collide under the old `pid % (B//k)` = pid % 2
+    entries = [entry(0, 100, 1.0), entry(1, 100, 0.0),
+               entry(2, 104, 3.0), entry(3, 104, 1.0)]
+    batch, _ = entries_to_batch(entries, lambda g, m: m.reward, pad_id=0,
+                                max_len=16, advantage_kind="grpo")
+    adv = np.asarray(batch["advantages"])
+    # within each prompt group the higher-reward response gets adv > 0
+    assert float(adv[0, 1]) > 0 > float(adv[1, 1])
+    assert float(adv[2, 1]) > 0 > float(adv[3, 1])
+
+
+def test_overlong_prompt_skipped_with_warning():
+    """A prompt >= max_len leaves no room for generated tokens: it must be
+    skipped with a warning rather than trained on an all-zero loss mask."""
+    from repro.core.buffer import BufferEntry
+    from repro.rl.trainer import entries_to_batch
+
+    ok = BufferEntry(uid=0, prompt=[1, 2], meta=None, generated=[3, 4],
+                     logprobs=[-1.0, -1.0], versions=[0, 0])
+    overlong = BufferEntry(uid=1, prompt=[1] * 40, meta=None, generated=[3],
+                           logprobs=[-1.0], versions=[0])
+    with pytest.warns(UserWarning, match="skipping 1"):
+        batch, info = entries_to_batch([ok, overlong], lambda g, m: 1.0,
+                                       pad_id=0, max_len=32)
+    assert batch["tokens"].shape[0] == 1
+    assert info["entries_skipped"] == 1
+    assert float(np.asarray(batch["loss_mask"]).sum()) > 0
+    with pytest.raises(ValueError, match="all .* entries were skipped"):
+        entries_to_batch([overlong], lambda g, m: 1.0, pad_id=0, max_len=32)
+
+
 def test_stitched_pi_old_importance_sampling():
     """Partial mode: a trajectory generated across two policy versions
     carries per-token behaviour logprobs; the trainer's ratio uses them
