@@ -7,7 +7,6 @@ distribution (printed as quantiles of the sampler used throughout).
 """
 from __future__ import annotations
 
-import math
 import random
 from typing import List
 
@@ -15,7 +14,7 @@ from benchmarks.bench_throughput import make_prompts, paper_length_sampler
 from repro.core.buffer import Mode, StatefulRolloutBuffer
 from repro.core.orchestrator import RolloutOrchestrator, SortedRLConfig
 from repro.core.policy import make_policy
-from repro.rollout.sim import SimCostModel, SimEngine
+from repro.rollout.sim import SimEngine
 
 
 def rollout_time(max_gen: int, n=128, seed=0) -> float:

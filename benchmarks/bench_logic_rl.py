@@ -39,7 +39,6 @@ def main(quick: bool = True) -> List[str]:
     for name, out in runs.items():
         fe = out["final_eval"]
         rm = out["rollout_metrics"]
-        n_samples = sum(1 for _ in out["history"]) * 16
         lines.append(
             f"fig3_logic_rl/{name},{out['wall_time_s']*1e6:.0f},"
             f"final_reward={fe['reward_mean']:.3f} "

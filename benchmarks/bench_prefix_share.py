@@ -1,0 +1,113 @@
+"""prefix_share/*: paged-KV-cache rollout rows (PR 3 tentpole).
+
+Measures what the page pool buys over the dense cache on a real (tiny)
+SlotEngine:
+
+  prefix_share/group{G}   one GRPO group of G same-prompt members rolled
+                          to completion — prefill-token reduction should
+                          sit at the sharing ideal (G-1)/G, with the
+                          page-pool occupancy peak reported;
+  prefix_share/resume     interrupt -> scavenge -> resubmit in partial
+                          mode — the resumed batch must re-prefill ZERO
+                          tokens (pages stayed resident).
+
+Each engine is warmed with one throwaway rollout so the timed pass
+measures steady-state paging, not jit compilation.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+PROMPT_LEN = 33          # pre-fill prefix of 32 tokens = 2 pages of 16
+MAX_GEN = 8
+
+_STATE = {}
+
+
+def _make_engine(capacity: int):
+    import jax
+
+    from repro.data import logic
+    from repro.rollout.engine import SlotEngine
+    from repro.train.loop import tiny_lm_config
+    if "model" not in _STATE:
+        from repro.models.model import build_model
+        cfg = tiny_lm_config(len(logic.VOCAB), d_model=32, layers=1, heads=2)
+        _STATE["model"] = build_model(cfg)
+        _STATE["params"] = _STATE["model"].init_params(jax.random.PRNGKey(0))
+    eng = SlotEngine(_STATE["model"], lambda: _STATE["params"],
+                     capacity=capacity, max_total_len=128, max_gen_len=MAX_GEN,
+                     eos_id=-1, pad_id=logic.VOCAB.pad_id, temperature=1.0)
+    assert eng.paged, "prefix_share rows require the paged engine"
+    return eng
+
+
+def _group(g: int, start_uid: int = 0):
+    from repro.core.buffer import BufferEntry
+    return [BufferEntry(uid=start_uid + i, prompt=[1] * PROMPT_LEN)
+            for i in range(g)]
+
+
+def _drain(eng) -> int:
+    peak = 0
+    while eng.active_uids():
+        eng.step()
+        peak = max(peak, int(eng.cache_stats()["pages_in_use"]))
+    return peak
+
+
+def group_row(g: int) -> str:
+    eng = _make_engine(capacity=g)
+    eng.submit(_group(g), version=0)            # warmup: compiles everything
+    _drain(eng)
+    base = eng.cache_stats()
+    t0 = time.perf_counter()
+    eng.submit(_group(g, start_uid=100), version=0)
+    peak = _drain(eng)
+    dt = time.perf_counter() - t0
+    st = eng.cache_stats()
+    run = st["prefill_tokens_run"] - base["prefill_tokens_run"]
+    saved = st["prefill_tokens_saved"] - base["prefill_tokens_saved"]
+    frac = saved / max(run + saved, 1)
+    ideal = (g - 1) / g
+    return (f"prefix_share/group{g},{dt*1e6:.0f},"
+            f"saved_frac={frac:.3f} ideal={ideal:.3f} "
+            f"pages_peak={peak} pool_pages={st['pages_total']:.0f}")
+
+
+def resume_row() -> str:
+    eng = _make_engine(capacity=4)
+    entries = _group(4)
+    eng.submit(entries, version=0)
+    for _ in range(4):                          # part-way through the budget
+        for ev in eng.step():
+            for e in entries:
+                if e.uid == ev.uid:
+                    e.generated.append(ev.token)
+                    e.logprobs.append(ev.logprob)
+                    e.versions.append(0)
+    eng.interrupt()                             # pages stay resident
+    base = eng.cache_stats()
+    t0 = time.perf_counter()
+    eng.submit(entries, version=1)              # partial-mode resume
+    _drain(eng)
+    dt = time.perf_counter() - t0
+    st = eng.cache_stats()
+    reprefill = st["prefill_tokens_run"] - base["prefill_tokens_run"]
+    return (f"prefix_share/resume,{dt*1e6:.0f},"
+            f"reprefill_tokens={reprefill:.0f} "
+            f"resumed={st['resumed_without_prefill']:.0f} "
+            f"occupancy_after_drain={st['page_occupancy']:.3f}")
+
+
+def main(smoke: bool = False) -> List[str]:
+    sizes = (2, 4) if smoke else (2, 4, 8)
+    rows = [group_row(g) for g in sizes]
+    rows.append(resume_row())
+    return rows
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,96 @@
+"""CI smoke-benchmark regression gate.
+
+Usage::
+
+    python -m benchmarks.compare NEW.json BASELINE.json [--threshold 2.0]
+
+Compares the ``--json`` output of ``benchmarks.run --smoke`` against the
+checked-in ``BENCH_smoke.json`` baseline and exits non-zero when
+
+  * a baseline row disappeared (a benchmark was silently dropped), or
+  * a row's ``us_per_call`` regressed more than ``threshold`` x its
+    *machine-normalized* baseline AND by more than ``ABS_FLOOR_US``
+    absolutely.
+
+Machine normalization: the baseline was recorded on some developer
+machine; CI runners are uniformly slower or faster.  The gate therefore
+scales every baseline by the **median** new/base ratio across rows — a
+uniformly 3x-slower runner shifts the median to 3 and stays green, while
+a single row that regressed relative to its peers still trips the
+threshold.  The absolute floor keeps micro rows (that jitter by integer
+factors) from flapping.
+
+New rows (not in the baseline) pass with a notice; refresh the baseline
+by re-running ``python -m benchmarks.run --smoke --json BENCH_smoke.json``
+on a quiet machine and committing the result.  A missing baseline file is
+the bootstrap case and passes (the first run commits it).
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import sys
+
+ABS_FLOOR_US = 1000.0   # ignore regressions smaller than 1 ms absolute
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    # rows without a numeric timing (e.g. roofline_table) are not gated
+    return {r["name"]: float(r["us_per_call"]) for r in data["rows"]
+            if r.get("us_per_call") is not None}
+
+
+def compare(new: dict, base: dict, threshold: float) -> int:
+    failures = []
+    ratios = [new[n] / base[n] for n in base
+              if n in new and base[n] > 0 and new[n] > 0]
+    scale = max(statistics.median(ratios), 1.0) if ratios else 1.0
+    print(f"machine scale factor (median new/base ratio): {scale:.2f}x")
+    for name, base_us in sorted(base.items()):
+        if name not in new:
+            failures.append(f"MISSING  {name} (present in baseline)")
+            continue
+        new_us = new[name]
+        norm_us = base_us * scale
+        regressed = (new_us > threshold * norm_us
+                     and new_us - norm_us > ABS_FLOOR_US)
+        mark = "FAIL" if regressed else "ok"
+        if regressed:
+            failures.append(
+                f"REGRESS  {name}: {base_us:.0f}us -> {new_us:.0f}us "
+                f"({new_us / max(norm_us, 1e-9):.2f}x normalized > "
+                f"{threshold:.1f}x)")
+        print(f"{mark:8s}{name}: {base_us:.0f}us -> {new_us:.0f}us")
+    for name in sorted(set(new) - set(base)):
+        print(f"new     {name}: {new[name]:.0f}us (no baseline yet)")
+    if failures:
+        print("\n".join(["", "smoke-benchmark gate FAILED:"] + failures),
+              file=sys.stderr)
+        return 1
+    print(f"\nsmoke-benchmark gate passed ({len(base)} baseline rows)")
+    return 0
+
+
+def main(argv) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(prog="benchmarks.compare",
+                                 description=__doc__)
+    ap.add_argument("new", help="fresh benchmarks.run --json output")
+    ap.add_argument("baseline", help="checked-in BENCH_smoke.json")
+    ap.add_argument("--threshold", type=float, default=2.0,
+                    help="fail when us_per_call exceeds this multiple of "
+                         "the baseline (default 2.0)")
+    args = ap.parse_args(argv)
+    if not os.path.exists(args.baseline):
+        print(f"no baseline at {args.baseline} — bootstrap run, commit "
+              f"{args.new} as the baseline", file=sys.stderr)
+        return 0
+    return compare(load_rows(args.new), load_rows(args.baseline),
+                   args.threshold)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -8,7 +8,6 @@ largest rollout model).
 from __future__ import annotations
 
 import json
-import sys
 from typing import Dict, List
 
 

@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig6b_group_size/*  group-size sensitivity (Fig. 6b)
   fill_policy/*       beyond-paper slot-fill study
   policy_sweep/*      every registered SchedulerPolicy, by name
+  prefix_share/*      paged-KV-cache GRPO prefix sharing + resume rows
   fig3_logic_rl/*     real RL token-efficiency on K&K (Fig. 3, quick mode)
   roofline_table/*    per (arch x shape) roofline terms (§Roofline)
 
@@ -17,9 +18,15 @@ roofline or real-RL sections) — the default verification path; full runs
 are opt-in.  The smoke pass sweeps every registered scheduling policy by
 name and runs examples/quickstart.py end to end, so a registry entry (or
 the quickstart) that rots fails the smoke gate.
+
+``--json PATH``: additionally write the rows as structured JSON
+({name, us_per_call, derived} plus the git sha) — the artifact the CI
+smoke gate diffs against the checked-in ``BENCH_smoke.json`` baseline
+(see benchmarks/compare.py).
 """
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
@@ -46,9 +53,48 @@ def quickstart_smoke_row() -> str:
     return f"smoke/quickstart,{dt*1e6:.0f},ok=1"
 
 
+def git_sha() -> str:
+    try:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        out = subprocess.run(["git", "rev-parse", "HEAD"], cwd=root,
+                             capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() if out.returncode == 0 else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def rows_to_json(rows, smoke: bool) -> dict:
+    parsed = []
+    for r in rows:
+        parts = r.split(",", 2)
+        # some sections (roofline_table) emit wide CSV rows whose second
+        # field is not a timing — keep them with us_per_call=None rather
+        # than crashing after the whole run completed
+        try:
+            us = float(parts[1])
+        except (IndexError, ValueError):
+            us = None
+        parsed.append({"name": parts[0], "us_per_call": us,
+                       "derived": ",".join(parts[2:]) if us is not None
+                       else ",".join(parts[1:])})
+    return {"git_sha": git_sha(), "smoke": smoke, "rows": parsed}
+
+
+def json_path_from_argv(argv) -> str:
+    """Validate --json PATH up front — failing after the full benchmark
+    run would throw the results away."""
+    if "--json" not in argv:
+        return ""
+    i = argv.index("--json")
+    if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
+        raise SystemExit("benchmarks.run: --json requires a PATH argument")
+    return argv[i + 1]
+
+
 def main() -> None:
     from benchmarks import (bench_ablation, bench_breakdown, bench_logic_rl,
-                            bench_throughput, roofline)
+                            bench_prefix_share, bench_throughput, roofline)
+    json_path = json_path_from_argv(sys.argv)
     smoke = "--smoke" in sys.argv
     if smoke:
         # ablation.main carries the acceptance-pinned fig6a/6b rows AND the
@@ -56,11 +102,14 @@ def main() -> None:
         sections = (("breakdown", bench_breakdown.main),
                     ("throughput", lambda: bench_throughput.main(smoke=True)),
                     ("ablation", bench_ablation.main),
+                    ("prefix_share",
+                     lambda: bench_prefix_share.main(smoke=True)),
                     ("quickstart", lambda: [quickstart_smoke_row()]))
     else:
         sections = (("breakdown", bench_breakdown.main),
                     ("throughput", bench_throughput.main),
                     ("ablation", bench_ablation.main),
+                    ("prefix_share", bench_prefix_share.main),
                     ("quickstart", lambda: [quickstart_smoke_row()]),
                     ("roofline", roofline.main))
     rows = []
@@ -75,6 +124,10 @@ def main() -> None:
     print("name,us_per_call,derived")
     for r in rows:
         print(r)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows_to_json(rows, smoke), f, indent=1)
+        print(f"# wrote {json_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

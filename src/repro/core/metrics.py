@@ -8,7 +8,7 @@ requests during interval k, dt_k its duration, and T total elapsed time.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -21,11 +21,27 @@ class RolloutMetrics:
     harvests: int = 0
     updates: int = 0
     updates_gated: int = 0          # batches vetoed by policy.update_gate
+    # paged-KV-cache gauges (zero for engines without a page pool)
+    prefill_tokens_saved: int = 0   # prefix sharing + resume-without-reprefill
+    page_occupancy_peak: float = 0.0
 
     def record(self, running: int, dt: float, new_tokens: int = 0) -> None:
         if dt > 0:
             self.intervals.append((running, dt))
         self.tokens_generated += new_tokens
+
+    def record_cache(self, stats: Optional[dict]) -> None:
+        """Fold an engine's cache_stats() snapshot into the gauges.
+
+        ``prefill_tokens_saved`` mirrors the engine's cumulative counter
+        (max, not sum — snapshots of the same counter); occupancy keeps
+        its peak."""
+        if not stats:
+            return
+        self.prefill_tokens_saved = max(
+            self.prefill_tokens_saved, int(stats.get("prefill_tokens_saved", 0)))
+        self.page_occupancy_peak = max(
+            self.page_occupancy_peak, float(stats.get("page_occupancy", 0.0)))
 
     @property
     def elapsed(self) -> float:
@@ -54,6 +70,9 @@ class RolloutMetrics:
         self.harvests += other.harvests
         self.updates += other.updates
         self.updates_gated += other.updates_gated
+        self.prefill_tokens_saved += other.prefill_tokens_saved
+        self.page_occupancy_peak = max(self.page_occupancy_peak,
+                                       other.page_occupancy_peak)
 
     def summary(self) -> dict:
         return {
@@ -65,4 +84,6 @@ class RolloutMetrics:
             "harvests": self.harvests,
             "updates": self.updates,
             "updates_gated": self.updates_gated,
+            "prefill_tokens_saved": self.prefill_tokens_saved,
+            "page_occupancy_peak": round(self.page_occupancy_peak, 4),
         }

@@ -93,6 +93,8 @@ class RolloutOrchestrator:
         from repro.core.policy import BasePolicy
         self._policy_admits = (getattr(type(policy), "admit_next_group", None)
                                is not BasePolicy.admit_next_group)
+        # paged engines expose page-pool gauges (occupancy, prefill saved)
+        self._cache_stats = getattr(engine, "cache_stats", None)
 
     # -- scheduling snapshot -------------------------------------------------
 
@@ -165,6 +167,8 @@ class RolloutOrchestrator:
                 self.buffer.mark_done(ev.uid, ev.finish_reason or "eos")
         dt = self.engine.clock - t0
         self.metrics.record(len(events), dt, new_tokens=len(events))
+        if self._cache_stats is not None:
+            self.metrics.record_cache(self._cache_stats())
 
     # -- one rollout iteration: decode until harvest -------------------------
 

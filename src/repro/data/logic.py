@@ -19,9 +19,9 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import random
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
-from repro.data.tokenizer import ANS, BOS, EOS, SEP, THINK, Vocab
+from repro.data.tokenizer import ANS, BOS, EOS, SEP, Vocab
 
 NAMES = ["alice", "bob", "carol", "dave", "erin", "frank", "grace"]
 ROLES = ["knight", "knave"]

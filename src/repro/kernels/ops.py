@@ -11,9 +11,10 @@ import functools
 import os
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.ragged_decode_attention import (
+    paged_decode_attention as _paged)
 from repro.kernels.ragged_decode_attention import (
     ragged_decode_attention as _ragged)
 
@@ -25,6 +26,13 @@ def ragged_decode_attention(q, k_cache, v_cache, kv_len, block_k: int = 128,
                             softcap: float = 0.0):
     return _ragged(q, k_cache, v_cache, kv_len, block_k=block_k,
                    softcap=softcap, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap",))
+def paged_decode_attention(q, k_pages, v_pages, block_tables, kv_len,
+                           softcap: float = 0.0):
+    return _paged(q, k_pages, v_pages, block_tables, kv_len,
+                  softcap=softcap, interpret=INTERPRET)
 
 
 @functools.partial(jax.jit,

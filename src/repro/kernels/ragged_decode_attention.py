@@ -1,4 +1,4 @@
-"""Ragged GQA decode-attention Pallas TPU kernel — the rollout hotolayer.
+"""Ragged GQA decode-attention Pallas TPU kernels — the rollout hot layer.
 
 One new token per slot attends over a per-slot-length KV cache.  This is
 the kernel the paper's scheduling feeds: length-sorted batches mean
@@ -7,10 +7,24 @@ neighbouring slots share similar ``kv_len``, so the kv-block skip pattern
 engine streams only live cache — the TPU-native payoff of SortedRL's
 sorting (see DESIGN.md §3).
 
+Two variants share one kernel body:
+
+* ``ragged_decode_attention`` — dense ``(B, S, Kh, D)`` cache, kv blocks
+  addressed contiguously (grid position == block index);
+* ``paged_decode_attention`` — the cache is a pool of fixed-size pages
+  ``(N, page, Kh, D)`` and each slot owns a *block table* mapping logical
+  kv blocks to physical pages (``repro.core.kv_cache``).  The table is a
+  scalar-prefetch operand, so the BlockSpec index_map dereferences it to
+  DMA exactly the pages a slot maps — shared GRPO prefix pages stream
+  once per slot without ever materialising a dense per-slot cache.
+
 Tiling: grid (B, S // block_k); each program holds the full (H, D) query
 tile in VMEM plus one (block_k, Kh, D) cache tile; flash-decode online
 softmax accumulates in VMEM scratch across the sequential k dimension.
-MXU alignment: block_k multiples of 128; D is the lane dimension.
+MXU alignment: block_k multiples of 128; D is the lane dimension.  For
+the paged variant block_k == page size; production pools use 128-row
+pages (multiple-of-128 constraint), tests exercise smaller interpreted
+shapes.
 """
 from __future__ import annotations
 
@@ -25,21 +39,18 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(kv_len_ref, q_ref, k_ref, v_ref, o_ref,
-            m_ref, l_ref, acc_ref, *, block_k: int, softcap: float):
-    """Refs: kv_len (1,) i32 | q (H, D) | k/v (block_k, Kh, D) |
-    o (H, D) | scratch m/l (H, 1) f32, acc (H, D) f32."""
-    kblk = pl.program_id(1)
-    nk = pl.num_programs(1)
-    kv_len = kv_len_ref[0]
+def _flash_decode_block(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                        *, kblk, nk, kstart, kv_len, softcap: float):
+    """Shared flash-decode body: one (block_k, Kh, D) kv tile starting at
+    logical position `kstart`, online-softmax accumulated in VMEM scratch.
+    Refs: q (H, D) | k/v (block_k, Kh, D) | o (H, D) |
+    scratch m/l (H, 1) f32, acc (H, D) f32."""
 
     @pl.when(kblk == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    kstart = kblk * block_k
 
     @pl.when(kstart < kv_len)           # ragged block skip
     def _compute():
@@ -74,6 +85,30 @@ def _kernel(kv_len_ref, q_ref, k_ref, v_ref, o_ref,
     def _finalize():
         l = jnp.maximum(l_ref[...], 1e-30)
         o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _kernel(kv_len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, block_k: int, softcap: float):
+    """Dense variant: kv block `kb` sits at cache rows [kb*block_k, ...)."""
+    kblk = pl.program_id(1)
+    _flash_decode_block(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                        kblk=kblk, nk=pl.num_programs(1),
+                        kstart=kblk * block_k, kv_len=kv_len_ref[0],
+                        softcap=softcap)
+
+
+def _paged_kernel(bt_ref, kv_len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, page_size: int, softcap: float):
+    """Paged variant: the BlockSpec index_map already dereferenced the
+    block table (scalar prefetch), so k/v refs hold the physical page for
+    logical block `kb`; only the position base differs from dense."""
+    del bt_ref   # consumed by the index_map
+    b = pl.program_id(0)
+    kblk = pl.program_id(1)
+    _flash_decode_block(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                        kblk=kblk, nk=pl.num_programs(1),
+                        kstart=kblk * page_size, kv_len=kv_len_ref[b],
+                        softcap=softcap)
 
 
 def ragged_decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
@@ -111,3 +146,52 @@ def ragged_decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
         interpret=interpret,
         name="ragged_decode_attention",
     )(kv_len, q, k_cache, v_cache)
+
+
+def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
+                           v_pages: jnp.ndarray, block_tables: jnp.ndarray,
+                           kv_len: jnp.ndarray, *, softcap: float = 0.0,
+                           interpret: bool = True) -> jnp.ndarray:
+    """Decode attention over a paged KV pool.
+
+    q: (B, H, D); k/v_pages: (N, page, Kh, D) physical page pool;
+    block_tables: (B, nb) i32 — logical kv block j of slot b lives in
+    physical page ``block_tables[b, j]`` (pad unused entries with any
+    valid page id; rows past ``kv_len`` are masked); kv_len: (B,) valid
+    lengths.  Returns (B, H, D).
+
+    The block table and kv_len ride in as scalar-prefetch operands so the
+    k/v index_maps can dereference the table — each grid step DMAs one
+    physical page, which is how a GRPO group's shared prefix pages are
+    read by every member without a dense per-slot copy.
+    """
+    B, H, D = q.shape
+    page, Kh = k_pages.shape[1], k_pages.shape[2]
+    nb = block_tables.shape[1]
+    assert block_tables.shape[0] == B and kv_len.shape == (B,)
+    kernel = functools.partial(_paged_kernel, page_size=page, softcap=softcap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,       # block_tables, kv_len
+        grid=(B, nb),
+        in_specs=[
+            pl.BlockSpec((None, H, D), lambda b, kb, bt, kl: (b, 0, 0)),
+            pl.BlockSpec((None, page, Kh, D),
+                         lambda b, kb, bt, kl: (bt[b, kb], 0, 0, 0)),
+            pl.BlockSpec((None, page, Kh, D),
+                         lambda b, kb, bt, kl: (bt[b, kb], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, H, D), lambda b, kb, bt, kl: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+        name="paged_decode_attention",
+    )(block_tables.astype(jnp.int32), kv_len.astype(jnp.int32),
+      q, k_pages, v_pages)

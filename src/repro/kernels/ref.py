@@ -12,6 +12,26 @@ def ragged_decode_attention_ref(q, k_cache, v_cache, kv_len,
     return L.decode_attention(q, k_cache, v_cache, kv_len, softcap=softcap)
 
 
+def gather_pages(pages: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
+    """Materialise a dense per-slot cache view from a paged pool.
+
+    pages: (N, page, Kh, D); block_tables: (B, nb) -> (B, nb*page, Kh, D).
+    This is the kernel-free path the engine uses on CPU: the paged Pallas
+    kernel reads the same pages block-by-block instead of gathering.
+    """
+    B, nb = block_tables.shape
+    g = jnp.take(pages, block_tables.reshape(-1), axis=0)
+    return g.reshape(B, nb * pages.shape[1], *pages.shape[2:])
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, kv_len,
+                               softcap: float = 0.0) -> jnp.ndarray:
+    """(B, H, D) x (N, page, Kh, D) x (B, nb) x (B,) -> (B, H, D)."""
+    return L.decode_attention(q, gather_pages(k_pages, block_tables),
+                              gather_pages(v_pages, block_tables),
+                              kv_len, softcap=softcap)
+
+
 def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0,
                         softcap: float = 0.0) -> jnp.ndarray:
     """(B, S, H, D) GQA causal attention oracle."""

@@ -21,7 +21,7 @@ from typing import Dict, Optional
 import jax
 
 from repro.launch.hlo_cost import analyse_hlo
-from repro.configs.base import (ARCH_ALIASES, ARCH_IDS, SHAPES, ModelConfig,
+from repro.configs.base import (ARCH_ALIASES, ARCH_IDS, SHAPES,
                                 get_config, shape_by_name)
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
                                make_production_mesh)

@@ -14,7 +14,6 @@ All numbers are per device (the module is the per-device SPMD program).
 """
 from __future__ import annotations
 
-import math
 import re
 from typing import Dict, List, Optional, Tuple
 

@@ -14,13 +14,12 @@ Strategies
 from __future__ import annotations
 
 import dataclasses
-import re
 from typing import Any, Dict, Optional, Tuple
 
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig
 
 
 @dataclasses.dataclass(frozen=True)

@@ -17,14 +17,13 @@ side outputs threaded through as an explicit return.
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.distributed.sharding import logical_constraint
 
 Params = Dict[str, jnp.ndarray]
 

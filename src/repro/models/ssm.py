@@ -244,7 +244,6 @@ def mamba2_decode(p: Params, cfg: ModelConfig, x1: jnp.ndarray,
     """x1: (B, d) one token.  conv_state: (B, K-1, conv_dim)."""
     s = cfg.ssm
     d_inner, nheads, conv_dim = mamba2_dims(cfg)
-    gN = s.ngroups * s.state_dim
     Bsz = x1.shape[0]
     z = jnp.einsum("bd,de->be", x1, p["in_z"])
     xi = jnp.einsum("bd,de->be", x1, p["in_x"])

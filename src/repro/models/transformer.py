@@ -8,7 +8,6 @@ sub-layers statically inside the scan body.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -222,7 +221,6 @@ def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
         x = embed_tokens(params, cfg, token[:, None])
     else:
         x = embeds[:, None] if embeds.ndim == 2 else embeds
-    B = x.shape[0]
     if cfg.pos_embedding == "learned":
         x = x + params["pos_embed"][kv_len][:, None].astype(x.dtype)
     if pattern_len(cfg) == 2:

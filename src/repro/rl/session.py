@@ -256,12 +256,18 @@ class RLSession:
                                 max_len=cfg.max_total_len,
                                 advantage_kind=cfg.advantage_kind,
                                 responses_per_prompt=cfg.responses_per_prompt)
+            # partial mode keeps resident KV across weight syncs (the
+            # paper's cache mechanism; recorded logprobs stay exact as
+            # pi_old); on-policy re-rolls must re-prefill under the fresh
+            # policy, or the prompt KV would bias the new rollouts
             engine = SlotEngine(model, trainer.params,
                                 capacity=cfg.rollout_batch,
                                 max_total_len=cfg.max_total_len,
                                 max_gen_len=cfg.max_gen_len,
                                 eos_id=vocab.eos_id, pad_id=vocab.pad_id,
-                                temperature=cfg.temperature, seed=cfg.seed)
+                                temperature=cfg.temperature, seed=cfg.seed,
+                                kv_retain_across_sync=(
+                                    Mode(cfg.mode) == Mode.PARTIAL))
             eval_gen = spec.make_generator(9999)
             eval_set = eval_gen.batch(cfg.eval_size)
 

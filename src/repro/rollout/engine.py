@@ -10,22 +10,50 @@ out — exactly the padding waste the bubble ratio (Eq. 4) measures.
 Weight sync is O(1): the engine reads params through a callback, so the
 trainer's latest state is always visible (colocated / stage-fused setup).
 
+Memory model
+------------
+For standard right-padding attention caches (keys ``{"k", "v"}``) the
+engine is **paged**: physical KV storage is a pool of fixed-size pages
+``(L, num_pages, page_size, Kh, D)`` and each sequence owns a refcounted
+page table (:mod:`repro.core.kv_cache`).  This buys what a dense
+``capacity x max_total_len`` cache cannot:
+
+* **GRPO prefix sharing** — entries submitted with an identical prefill
+  prefix (group members share one prompt) prefill ONCE; the other G-1
+  members map the same prefix pages.  Divergence is copy-on-write at the
+  page written by decode.
+* **Resume without re-prefill** — interrupted sequences keep their pages
+  resident, so a scavenged ``partial``-mode entry (or the prompt of an
+  on-policy re-roll) resumes by remapping pages instead of re-running
+  prefill.
+The decode step materialises a dense per-slot view by gathering pages
+through the block tables (bucketed to a power-of-two table width), runs
+the model's unchanged ``decode_step`` on it, and scatters each slot's
+written page back.  The TPU-ready decode attention that reads pages
+*without* the gather is
+``kernels/ragged_decode_attention.paged_decode_attention`` (block tables
+as scalar-prefetch operands); it is validated cell-for-cell against the
+same gather view (``kernels/ref.gather_pages``) and is the drop-in for
+the model's attention layer when deploying on hardware — the engine's
+gather path stays as the CPU/test oracle.
+
+Families with exotic cache layouts (ssm/hybrid state, local/global ring
+buffers, cross-attention) fall back to the dense layout (``paged=False``).
+
 Hot-path notes
 --------------
-* ``step()`` is loop-free on the host: EOS/budget masking, event
-  construction, and slot retirement are numpy array ops over the
-  :class:`SlotTable`.  Events come out in ascending slot order, which is
-  stable for the lifetime of each request's occupancy.
+* ``step()`` stays loop-free on the host for slot bookkeeping: EOS/budget
+  masking, event construction, and slot retirement are numpy array ops
+  over the :class:`SlotTable`.  Page bookkeeping (COW planning, block
+  tables, committed-token appends) is O(active) python per step inside
+  :class:`~repro.core.kv_cache.PagedKVCache` — same order as event
+  construction, and small next to the device step.
 * Prefill shapes are bucketed — width to the next power of two (clamped
   to ``max_total_len``) and batch to the next power of two (clamped to
   ``capacity``) — so ``_prefill_cache`` holds at most
-  O(log max_total_len · log capacity) compiled functions instead of one
-  per exact (width, batch) pair.  Right-padding models mask the extra
-  width via ``prompt_lens``/``kv_len``; left-padding models see a longer
-  pad prefix (masked by their prefill), but since their valid tokens end
-  AT the width, inflation eats generation headroom — their buckets are
-  capped at ``max_total_len - max_gen_len - 1`` with an exact-width
-  fallback for longer prompts (see ``_bucket_width``).
+  O(log max_total_len · log capacity) compiled functions.  The paged
+  decode compiles one variant per power-of-two block-table width,
+  bounded by O(log pages_per_seq).
 """
 from __future__ import annotations
 
@@ -38,6 +66,7 @@ import numpy as np
 
 from repro.core.buffer import BufferEntry
 from repro.core.engine_api import SlotTable, StepEvent
+from repro.core.kv_cache import PagedKVCache
 from repro.models.model import Model
 
 # per-family cache batch-axis maps (see Model cache layouts)
@@ -50,6 +79,8 @@ CACHE_BATCH_AXIS = {
     "mlstm_C": 1, "mlstm_n": 1, "mlstm_conv": 1,
     "slstm_c": 1, "slstm_n": 1, "slstm_h": 1, "slstm_m": 1,
 }
+
+DEFAULT_PAGE_SIZE = 16
 
 
 def next_pow2(n: int) -> int:
@@ -76,11 +107,22 @@ def cache_put(cache: Dict[str, jnp.ndarray], sub: Dict[str, jnp.ndarray],
     return out
 
 
+def supports_paging(model: Model) -> bool:
+    """Paged layout needs right padding and a plain {k, v} cache."""
+    if model.padding_side != "right":
+        return False
+    shapes = jax.eval_shape(lambda: model.init_cache(1, 1))
+    return set(shapes) == {"k", "v"}
+
+
 class SlotEngine:
     def __init__(self, model: Model, params_fn: Callable[[], Dict],
                  capacity: int, max_total_len: int, max_gen_len: int,
                  eos_id: int, pad_id: int = 0, temperature: float = 1.0,
-                 seed: int = 0):
+                 seed: int = 0, paged: Optional[bool] = None,
+                 page_size: int = DEFAULT_PAGE_SIZE,
+                 num_pages: Optional[int] = None,
+                 kv_retain_across_sync: bool = True):
         self.model = model
         self.params_fn = params_fn
         self.capacity = capacity
@@ -93,9 +135,32 @@ class SlotEngine:
         self._t0 = time.monotonic()
         self.version = 0
 
+        if paged is None:
+            paged = supports_paging(model)
+        elif paged:
+            assert supports_paging(model), \
+                "paged KV cache requires right padding and a {k, v} cache"
+        self.paged = paged
         self.slots = SlotTable(capacity)
-        self.cache = model.init_cache(capacity, max_total_len)
-        self._decode_jit = jax.jit(self._decode_fn)
+        if paged:
+            self.page_size = page_size
+            self._pages_per_seq = -(-max_total_len // page_size)
+            # default: dense-equivalent capacity + COW headroom + garbage
+            self.num_pages = num_pages or (
+                capacity * self._pages_per_seq + capacity + 1)
+            self.cache = model.init_cache(self.num_pages, page_size)
+            # retain=True keeps resident/shared KV across weight syncs
+            # (PipelineRL/APRIL approximation, counted in stale_kv_reuses);
+            # retain=False restores dense fresh-prefill-after-update
+            # semantics — use it for on-policy re-rolls (see rl/session.py)
+            self.kv = PagedKVCache(self.num_pages, page_size,
+                                   extra_rows=model.prefill_extra,
+                                   retain_across_sync=kv_retain_across_sync)
+            self._paged_decode_cache: Dict[int, Callable] = {}
+        else:
+            self.cache = model.init_cache(capacity, max_total_len)
+            self.kv = None
+            self._decode_jit = jax.jit(self._decode_fn)
         self._prefill_cache: Dict[Tuple[int, int], Callable] = {}
 
     # -- time ---------------------------------------------------------------
@@ -113,20 +178,31 @@ class SlotEngine:
         return self.slots.active_uids()
 
     def sync_weights(self, version: int) -> None:
+        if self.paged:
+            self.kv.sync_version(version)
         self.version = version   # params_fn always reads the latest state
+
+    def cache_stats(self) -> Optional[Dict[str, float]]:
+        """Page-pool gauges + prefix-sharing counters (None when dense)."""
+        return self.kv.stats_dict() if self.paged else None
 
     # -- submit: batched prefill of new entries into free slots ---------------
 
     def submit(self, entries: Sequence[BufferEntry], version: int) -> None:
         if not entries:
             return
-        k = len(entries)
-        slots = self.slots.allocate(k)
-        params = self.params_fn()
-
+        slots = self.slots.allocate(len(entries))
         seqs = [list(e.prompt) + list(e.generated) for e in entries]
         # prefill everything but the last token; it is fed on the next step
         pre = [s[:-1] for s in seqs]
+        if self.paged:
+            self._submit_paged(entries, slots, seqs, pre)
+        else:
+            self._submit_dense(entries, slots, seqs, pre)
+
+    def _submit_dense(self, entries, slots, seqs, pre) -> None:
+        k = len(entries)
+        params = self.params_fn()
         width = self._bucket_width(max(1, max(len(p) for p in pre)))
         kb = self._bucket_batch(k)
         toks = np.full((kb, width), self.pad_id, np.int32)
@@ -156,6 +232,81 @@ class SlotEngine:
             t.kv_start[slots] = width - plens[:k]
         t.gen_count[slots] = [len(e.generated) for e in entries]
         t.gen_budget[slots] = self.max_gen_len
+
+    def _submit_paged(self, entries, slots, seqs, pre) -> None:
+        """Prefill only unique, non-resident prefixes; map everyone else
+        onto existing pages (prefix sharing / resume-without-reprefill)."""
+        kv = self.kv
+        leaders: List[int] = []
+        followers: List[Tuple[int, int]] = []   # (idx, leader idx)
+        key_leader: Dict[Tuple[int, ...], int] = {}
+        for i, e in enumerate(entries):
+            key = tuple(pre[i])
+            if kv.try_resume(e.uid, key):
+                continue                        # pages still resident
+            donor = kv.find_donor(key)
+            if donor is not None:
+                kv.share(e.uid, donor, key)     # cross-batch sharing
+                continue
+            li = key_leader.get(key)
+            if li is None:
+                key_leader[key] = i
+                leaders.append(i)
+            else:
+                followers.append((i, li))       # in-batch sharing
+        if leaders:
+            self._prefill_to_pages([entries[i] for i in leaders],
+                                   [pre[i] for i in leaders])
+        for i, li in followers:
+            kv.share(entries[i].uid, entries[li].uid, tuple(pre[i]))
+
+        t = self.slots
+        extra = self.model.prefill_extra
+        t.uid[slots] = [e.uid for e in entries]
+        t.active[slots] = True
+        t.next_token[slots] = [s[-1] for s in seqs]
+        t.kv_len[slots] = [len(p) + extra for p in pre]
+        t.kv_start[slots] = 0
+        t.gen_count[slots] = [len(e.generated) for e in entries]
+        t.gen_budget[slots] = self.max_gen_len
+
+    def _prefill_to_pages(self, entries, pres) -> None:
+        """Run one bucketed prefill over the unique prefixes and scatter
+        the resulting KV rows into freshly allocated pages."""
+        params = self.params_fn()
+        P = self.page_size
+        extra = self.model.prefill_extra
+        width = self._bucket_width(max(1, max(len(p) for p in pres)))
+        kb = self._bucket_batch(len(entries))
+        cache_len = -(-(width + extra) // P) * P
+        toks = np.full((kb, width), self.pad_id, np.int32)
+        plens = np.zeros(kb, np.int32)
+        for i, p in enumerate(pres):
+            plens[i] = len(p)
+            toks[i, :len(p)] = p                # paged => right padding
+        batch = {"tokens": jnp.asarray(toks), "prompt_lens": jnp.asarray(plens)}
+        self._add_stub_inputs(batch, kb)
+        sub_cache = self.model.init_cache(kb, cache_len)
+        _, sub_cache = self._prefill(params, batch, sub_cache, width, kb)
+
+        rows, blks, phys = [], [], []
+        for i, (e, p) in enumerate(zip(entries, pres)):
+            table = self.kv.register_prefill(e.uid, tuple(p))
+            for j, page in enumerate(table):
+                rows.append(i)
+                blks.append(j)
+                phys.append(page)
+        rows, blks = np.asarray(rows), np.asarray(blks)
+        phys = np.asarray(phys)
+        cache = dict(self.cache)
+        for name in ("k", "v"):
+            sub = sub_cache[name]               # (L, kb, cache_len, Kh, D)
+            nl, nb_, ns = sub.shape[:3]
+            blocks = sub.reshape(nl, nb_, ns // P, P, *sub.shape[3:])
+            sel = blocks[:, rows, blks]         # (L, n_pages, P, Kh, D)
+            cache[name] = cache[name].at[:, phys].set(
+                sel.astype(cache[name].dtype))
+        self.cache = cache
 
     def _add_stub_inputs(self, batch: Dict, k: int) -> None:
         cfg = self.model.cfg
@@ -193,9 +344,7 @@ class SlotEngine:
 
     # -- decode ---------------------------------------------------------------
 
-    def _decode_fn(self, params, token, cache, kv_len, kv_start, key):
-        logits, cache = self.model.decode_step(params, token, cache, kv_len,
-                                               kv_start=kv_start)
+    def _sample(self, logits, key):
         logits = logits.astype(jnp.float32)
         if self.temperature > 0:
             sampled = jax.random.categorical(key, logits / self.temperature,
@@ -204,7 +353,61 @@ class SlotEngine:
             sampled = jnp.argmax(logits, axis=-1)
         logprobs = jax.nn.log_softmax(logits, axis=-1)
         lp = jnp.take_along_axis(logprobs, sampled[:, None], axis=1)[:, 0]
-        return sampled.astype(jnp.int32), lp, cache
+        return sampled.astype(jnp.int32), lp
+
+    def _decode_fn(self, params, token, cache, kv_len, kv_start, key):
+        logits, cache = self.model.decode_step(params, token, cache, kv_len,
+                                               kv_start=kv_start)
+        sampled, lp = self._sample(logits, key)
+        return sampled, lp, cache
+
+    def _paged_decode_fn(self, params, token, cache, bt, kv_len, key):
+        """One decode step over the page pool.
+
+        Gathers a dense per-slot view through the block tables (the CPU
+        analogue of the paged Pallas kernel's block-table reads), runs the
+        model's decode step on it, then scatters each slot's written page
+        back.  Host-side COW (``prepare_step``) guarantees write pages are
+        exclusively owned, so the scatter indices never collide except on
+        the shared garbage page of inactive slots.
+        """
+        P = self.page_size
+        B, nb = bt.shape
+
+        def gather(pages):
+            g = jnp.take(pages, bt.reshape(-1), axis=1)
+            return g.reshape(pages.shape[0], B, nb * P, *pages.shape[3:])
+
+        view = {"k": gather(cache["k"]), "v": gather(cache["v"])}
+        logits, view = self.model.decode_step(params, token, view, kv_len)
+        sampled, lp = self._sample(logits, key)
+        blk = kv_len // P
+
+        def take_page(x, b):                    # x: (L, S, Kh, D) one slot
+            return jax.lax.dynamic_slice_in_dim(x, b * P, P, axis=1)
+
+        k_new = jax.vmap(take_page, in_axes=(1, 0), out_axes=1)(view["k"], blk)
+        v_new = jax.vmap(take_page, in_axes=(1, 0), out_axes=1)(view["v"], blk)
+        phys = jnp.take_along_axis(bt, blk[:, None], axis=1)[:, 0]
+        cache = {
+            "k": cache["k"].at[:, phys].set(k_new.astype(cache["k"].dtype)),
+            "v": cache["v"].at[:, phys].set(v_new.astype(cache["v"].dtype)),
+        }
+        return sampled, lp, cache
+
+    def _paged_decode(self, params, token, cache, bt, kv_len, key):
+        fn = self._paged_decode_cache.get(bt.shape[1])
+        if fn is None:
+            fn = jax.jit(self._paged_decode_fn)
+            self._paged_decode_cache[bt.shape[1]] = fn
+        return fn(params, token, cache, bt, kv_len, key)
+
+    def _copy_pages(self, copies: List[Tuple[int, int]]) -> None:
+        """Apply host-planned copy-on-write page copies on device."""
+        src = np.asarray([s for s, _ in copies])
+        dst = np.asarray([d for _, d in copies])
+        self.cache = {name: arr.at[:, dst].set(arr[:, src])
+                      for name, arr in self.cache.items()}
 
     def step(self) -> List[StepEvent]:
         t = self.slots
@@ -214,9 +417,22 @@ class SlotEngine:
         params = self.params_fn()
         self._key, sub = jax.random.split(self._key)
         kv_len = np.where(t.active, t.kv_len, 0).astype(np.int32)
-        sampled, lp, self.cache = self._decode_jit(
-            params, jnp.asarray(t.next_token), self.cache,
-            jnp.asarray(kv_len), jnp.asarray(t.kv_start), sub)
+        if self.paged:
+            uids_act = t.uid[act].tolist()
+            copies = self.kv.prepare_step(uids_act, t.kv_len[act].tolist())
+            if copies:
+                self._copy_pages(copies)
+            nb = min(next_pow2(max(1, self.kv.max_blocks(uids_act))),
+                     self._pages_per_seq)
+            bt = jnp.asarray(self.kv.block_table(t.uid.tolist(), nb))
+            sampled, lp, self.cache = self._paged_decode(
+                params, jnp.asarray(t.next_token), self.cache, bt,
+                jnp.asarray(kv_len), sub)
+            self.kv.append_tokens(uids_act, t.next_token[act].tolist())
+        else:
+            sampled, lp, self.cache = self._decode_jit(
+                params, jnp.asarray(t.next_token), self.cache,
+                jnp.asarray(kv_len), jnp.asarray(t.kv_start), sub)
         sampled = np.asarray(sampled)
         lp = np.asarray(lp)
 
@@ -231,6 +447,8 @@ class SlotEngine:
         reasons = np.where(eos, "eos", np.where(over, "length", None))
 
         uids = t.uid[act].tolist()          # read before batched release
+        if self.paged:
+            self.kv.release_many(t.uid[act[done]].tolist())
         t.release(act[done])
         cont = act[~done]
         t.next_token[cont] = toks[~done]
@@ -243,4 +461,6 @@ class SlotEngine:
         sel = self.slots.select(uids)
         out = [int(u) for u in self.slots.uid[sel]]
         self.slots.release(sel)
+        if self.paged:
+            self.kv.deactivate_many(out)   # keep pages resident for resume
         return out

@@ -22,7 +22,6 @@ import inspect
 import math
 import textwrap
 
-import numpy as np
 import pytest
 
 from repro.core.buffer import BufferEntry, Mode, StatefulRolloutBuffer
@@ -54,13 +53,13 @@ def make_sim(capacity=CAPACITY, max_gen=MAX_GEN):
     return SimEngine(capacity=capacity, max_gen_len=max_gen, seed=0)
 
 
-def make_slot(capacity=CAPACITY, max_gen=MAX_GEN, eos_id=-1):
+def make_slot(capacity=CAPACITY, max_gen=MAX_GEN, eos_id=-1, **kw):
     from repro.rollout.engine import SlotEngine
     t = _tiny_model()
     # eos_id=-1: finishes are budget-driven, so scenarios are deterministic
     return SlotEngine(t["model"], lambda: t["params"], capacity=capacity,
                       max_total_len=MAX_TOTAL, max_gen_len=max_gen,
-                      eos_id=eos_id, pad_id=t["pad"], temperature=1.0)
+                      eos_id=eos_id, pad_id=t["pad"], temperature=1.0, **kw)
 
 
 def _tiny_left_model():
@@ -89,8 +88,20 @@ def make_slot_left(capacity=CAPACITY, max_gen=MAX_GEN, eos_id=-1,
                       eos_id=eos_id, pad_id=0, temperature=1.0)
 
 
+def make_slot_dense(capacity=CAPACITY, max_gen=MAX_GEN, eos_id=-1):
+    """Dense-cache SlotEngine (the pre-paging memory model, kept as an
+    escape hatch for exotic cache layouts and as the oracle for the paged
+    engine's token stream)."""
+    from repro.rollout.engine import SlotEngine
+    t = _tiny_model()
+    return SlotEngine(t["model"], lambda: t["params"], capacity=capacity,
+                      max_total_len=MAX_TOTAL, max_gen_len=max_gen,
+                      eos_id=eos_id, pad_id=t["pad"], temperature=1.0,
+                      paged=False)
+
+
 ENGINES = [("sim", make_sim), ("slot", make_slot),
-           ("slot_left", make_slot_left)]
+           ("slot_dense", make_slot_dense), ("slot_left", make_slot_left)]
 
 
 @pytest.fixture(params=[name for name, _ in ENGINES])
@@ -339,3 +350,195 @@ def test_slot_table_shared_by_both_engines():
         eng = factory()
         assert isinstance(eng.slots, SlotTable)
         assert eng.slots.capacity == eng.capacity
+
+
+# -- paged KV cache accounting (PR 3 tentpole) --------------------------------
+#
+# The default SlotEngine above already runs every scenario on the paged
+# memory model; these cases additionally pin down the page-pool contract:
+# prefix sharing, copy-on-write isolation, resume-without-reprefill, and
+# zero leaked pages/references at quiescence.
+
+def _drained_pool_is_clean(eng):
+    assert not eng.active_uids()
+    st = eng.cache_stats()
+    assert st["pages_in_use"] == 0, st
+    assert (eng.kv.pool.refcount == 0).all()
+    eng.kv.check_invariants()
+
+
+def group_entries(g, prompt_len=8, start_uid=0):
+    """A GRPO-style group: identical prompt, one entry per member."""
+    return [BufferEntry(uid=start_uid + i, prompt=[1] * prompt_len)
+            for i in range(g)]
+
+
+def test_paged_group_prefills_shared_prompt_once():
+    """G same-prompt members cost ONE prefill of the shared prefix; the
+    other G-1 map the same pages, and every reference drops to zero when
+    the group finishes (no leaked pages)."""
+    g, plen = 4, 8
+    eng = make_slot()
+    eng.submit(group_entries(g, plen), version=0)
+    st = eng.cache_stats()
+    assert st["prefill_tokens_run"] == plen - 1
+    assert st["prefill_tokens_saved"] == (g - 1) * (plen - 1)
+    assert st["shared_prefills"] == g - 1
+    run_to_completion(eng)
+    _drained_pool_is_clean(eng)
+
+
+def test_paged_cow_keeps_group_members_isolated():
+    """Members sharing a partial prefix page diverge via copy-on-write;
+    the paged token streams match the dense engine's exactly (greedy)."""
+    def run(factory):
+        eng = factory()
+        es = [BufferEntry(uid=i, prompt=[1, 2, 3, 4, 2 + i])
+              for i in range(3)] + [BufferEntry(uid=9, prompt=[3, 1, 4])]
+        eng.submit(es, version=0)
+        toks = {e.uid: [] for e in es}
+        while eng.active_uids():
+            for ev in checked_step(eng):
+                toks[ev.uid].append(ev.token)
+        return toks
+
+    def greedy_paged():
+        eng = make_slot()
+        eng.temperature = 0.0
+        return eng
+
+    def greedy_dense():
+        eng = make_slot_dense()
+        eng.temperature = 0.0
+        return eng
+
+    paged, dense = run(greedy_paged), run(greedy_dense)
+    assert paged == dense, (paged, dense)
+
+
+@pytest.mark.parametrize("mode", [Mode.ON_POLICY, Mode.PARTIAL])
+def test_paged_resume_without_reprefill(mode):
+    """Interrupted entries keep pages resident: resubmitting scavenged
+    entries runs ZERO new prefill tokens (observable via cache_stats),
+    and the pool is clean after the resumed rollout drains."""
+    eng = make_slot()
+    buf = StatefulRolloutBuffer(mode)
+    uids = buf.load_prompts([[1, 2, 3, 4, 5], [1, 2, 3, 4, 5]])
+    buf.mark_running(uids)
+    eng.submit(buf.running(), version=0)
+    for _ in range(2):
+        for ev in checked_step(eng):
+            buf.record_tokens(ev.uid, [ev.token], [ev.logprob], 0)
+            if ev.done:
+                buf.mark_done(ev.uid, ev.finish_reason)
+    for uid in eng.interrupt():
+        buf.scavenge(uid)
+    run_before = eng.cache_stats()["prefill_tokens_run"]
+    saved_before = eng.cache_stats()["prefill_tokens_saved"]
+    assert eng.cache_stats()["resident_seqs"] == 2
+    resumed = buf.pending()
+    buf.mark_running([e.uid for e in resumed])
+    eng.submit(resumed, version=1)
+    st = eng.cache_stats()
+    assert st["prefill_tokens_run"] == run_before, "resume re-ran prefill"
+    assert st["resumed_without_prefill"] == 2
+    assert st["prefill_tokens_saved"] > saved_before
+    for ev in run_to_completion(eng):
+        buf.record_tokens(ev.uid, [ev.token], [ev.logprob], 1)
+        if ev.done:
+            buf.mark_done(ev.uid, ev.finish_reason)
+    buf.check_invariants()
+    _drained_pool_is_clean(eng)
+
+
+def test_paged_oversubscribed_pool_with_shared_prefixes():
+    """A pool too small for CAPACITY dense sequences still serves a
+    shared-prompt group: the prefix pages are mapped, not copied.  Dense
+    sizing here would need capacity * ceil(31/16) = 8 pages; sharing fits
+    in 6 (2 prefix + at most 4 COW write pages)."""
+    plen = 25                       # pre = 24 rows = 1.5 pages of 16
+    eng = make_slot(num_pages=7)    # 6 usable + garbage page
+    assert eng.paged
+    eng.submit(group_entries(CAPACITY, plen), version=0)
+    evs = run_to_completion(eng)
+    assert sum(1 for e in evs if e.done) == CAPACITY
+    st = eng.cache_stats()
+    assert st["prefill_tokens_run"] == plen - 1
+    assert st["prefill_tokens_saved"] == (CAPACITY - 1) * (plen - 1)
+    _drained_pool_is_clean(eng)
+
+
+def test_paged_strict_sync_invalidates_stale_kv():
+    """kv_retain_across_sync=False: a weight sync drops pre-sync resident
+    prefixes, so scavenged entries re-prefill under the fresh policy
+    (exact dense semantics — the on-policy re-roll setting)."""
+    eng = make_slot(kv_retain_across_sync=False)
+    e = BufferEntry(uid=0, prompt=[1, 2, 3, 4])
+    eng.submit([e], version=0)
+    checked_step(eng)
+    eng.interrupt()
+    run_before = eng.cache_stats()["prefill_tokens_run"]
+    eng.sync_weights(1)
+    assert eng.cache_stats()["pages_in_use"] == 0, "stale resident kept"
+    eng.submit([e], version=1)
+    st = eng.cache_stats()
+    assert st["prefill_tokens_run"] > run_before, "resume skipped prefill"
+    assert st["resumed_without_prefill"] == 0
+    assert st["stale_kv_reuses"] == 0
+    run_to_completion(eng)
+    _drained_pool_is_clean(eng)
+
+
+def test_paged_retaining_sync_reuses_and_counts_stale_kv():
+    """Default (partial-mode) setting: resident pages survive the sync —
+    the paper's cache mechanism — and each reuse of pre-sync KV is
+    observable via the stale_kv_reuses counter."""
+    eng = make_slot()                       # kv_retain_across_sync=True
+    e = BufferEntry(uid=0, prompt=[1, 2, 3, 4])
+    eng.submit([e], version=0)
+    checked_step(eng)
+    eng.interrupt()
+    run_before = eng.cache_stats()["prefill_tokens_run"]
+    eng.sync_weights(1)
+    assert eng.cache_stats()["pages_in_use"] > 0, "resident pages dropped"
+    eng.submit([e], version=1)
+    st = eng.cache_stats()
+    assert st["prefill_tokens_run"] == run_before
+    assert st["resumed_without_prefill"] == 1
+    assert st["stale_kv_reuses"] == 1
+    run_to_completion(eng)
+    _drained_pool_is_clean(eng)
+
+
+def test_paged_pool_pressure_evicts_resident_lru():
+    """Resident (interrupted) sequences are reclaimed under pool pressure
+    instead of failing the submit."""
+    eng = make_slot(num_pages=9)    # 8 usable pages
+    eng.submit([BufferEntry(uid=i, prompt=[2 + i] * 20) for i in range(4)],
+               version=0)
+    checked_step(eng)
+    eng.interrupt()                 # 4 resident seqs x 2 pages = full pool
+    assert eng.cache_stats()["pages_in_use"] == 8
+    eng.submit([BufferEntry(uid=10 + i, prompt=[9 + i] * 20)
+                for i in range(4)], version=0)
+    st = eng.cache_stats()
+    assert st["evictions"] >= 3, st
+    run_to_completion(eng)
+    eng.kv.check_invariants()
+
+
+def test_paged_metrics_flow_through_orchestrator():
+    """RolloutOrchestrator surfaces prefill-tokens-saved and page-pool
+    occupancy for paged engines."""
+    from repro.core.orchestrator import RolloutOrchestrator, SortedRLConfig
+    from repro.core.policy import make_policy
+    eng = make_slot()
+    buf = StatefulRolloutBuffer(Mode.ON_POLICY)
+    cfg = SortedRLConfig(rollout_batch=CAPACITY, group_size=1,
+                         update_batch=CAPACITY, max_gen_len=MAX_GEN)
+    orch = RolloutOrchestrator(eng, buf, cfg, make_policy("baseline"),
+                               lambda req: None)
+    orch.run_group([[1, 2, 3]] * CAPACITY)      # one shared-prompt group
+    s = orch.metrics.summary()
+    assert s["prefill_tokens_saved"] == (CAPACITY - 1) * 2
+    assert 0.0 < s["page_occupancy_peak"] <= 1.0

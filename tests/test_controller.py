@@ -3,13 +3,12 @@ termination, micro-curriculum ordering, bubble-ratio relations between the
 strategies, and the §4.4.2 ablations."""
 import random
 
-import pytest
 
 from repro.core.buffer import Mode, StatefulRolloutBuffer
 from repro.core.controller import (CanonicalController, PipelinedController,
                                    SortedRLConfig, SortedRLController,
                                    UngroupedController)
-from repro.rollout.sim import SimCostModel, SimEngine, lognormal_lengths
+from repro.rollout.sim import SimEngine, lognormal_lengths
 
 
 def _prompts(n, seed=0):
@@ -69,7 +68,6 @@ def test_bubble_ratio_ordering():
     >50% (the paper's abstract claim)."""
     base, _ = _run("baseline", group=1, n=32, cap=32)
     # 4 sequential batches
-    eng = base.engine
     sortd, _ = _run("sorted", n=128, cap=32, group=4)
     assert base.metrics.bubble_ratio > 0.3
     assert sortd.metrics.bubble_ratio < 0.5 * base.metrics.bubble_ratio

@@ -1,14 +1,11 @@
 """SlotEngine behaviour (real JAX decode), data generators/verifiers,
 optimizer, and checkpoint round-trip."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from proptest import cases, integers
 
-from repro.core.buffer import BufferEntry, Mode, StatefulRolloutBuffer
+from repro.core.buffer import BufferEntry, Mode
 from repro.data import logic, math_synth
 from repro.models.model import build_model
 from repro.rollout.engine import SlotEngine
@@ -159,7 +156,7 @@ def test_adamw_converges_quadratic():
 
 def test_grad_clip():
     from repro.train.optimizer import (AdamWConfig, adamw_update,
-                                       init_opt_state, global_norm)
+                                       init_opt_state)
     cfg = AdamWConfig(lr=1e-3, grad_clip=1.0)
     params = {"w": jnp.zeros(3)}
     opt = init_opt_state(params, cfg)

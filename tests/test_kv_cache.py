@@ -1,0 +1,197 @@
+"""Host-side paged KV-cache bookkeeping (repro.core.kv_cache): page pool
+refcounting, prefix sharing, copy-on-write planning, residency/eviction.
+Pure numpy — no jax, no engine."""
+import pytest
+
+from repro.core.kv_cache import (GARBAGE_PAGE, PagedKVCache, PagePool,
+                                 PoolExhausted)
+
+
+def make_kv(num_pages=9, page_size=4, extra_rows=0):
+    return PagedKVCache(num_pages, page_size, extra_rows=extra_rows)
+
+
+# -- PagePool -----------------------------------------------------------------
+
+def test_pool_alloc_release_cycle():
+    pool = PagePool(num_pages=4, page_size=8)
+    assert pool.free_pages() == 3 and pool.pages_in_use == 0
+    a, b = pool.alloc(), pool.alloc()
+    assert a != b and GARBAGE_PAGE not in (a, b)
+    assert pool.pages_in_use == 2
+    pool.retain(a)
+    assert not pool.release(a)          # refcount 2 -> 1: not freed
+    assert pool.release(a)              # 1 -> 0: freed
+    assert pool.release(b)
+    assert pool.free_pages() == 3 and pool.occupancy() == 0.0
+
+
+def test_pool_exhaustion_raises():
+    pool = PagePool(num_pages=3, page_size=8)
+    pool.alloc(), pool.alloc()
+    with pytest.raises(PoolExhausted):
+        pool.alloc()
+
+
+def test_garbage_page_never_allocated_or_released():
+    pool = PagePool(num_pages=3, page_size=8)
+    assert pool.alloc() != GARBAGE_PAGE
+    assert pool.alloc() != GARBAGE_PAGE
+    with pytest.raises(AssertionError):
+        pool.release(GARBAGE_PAGE)
+
+
+# -- prefill / sharing --------------------------------------------------------
+
+def test_register_prefill_allocates_by_rows():
+    kv = make_kv(page_size=4)
+    table = kv.register_prefill(0, tuple(range(10)))    # 10 rows -> 3 pages
+    assert len(table) == 3
+    assert kv.stats.prefill_tokens_run == 10
+    kv.check_invariants()
+
+
+def test_extra_rows_count_toward_pages():
+    kv = make_kv(page_size=4, extra_rows=3)             # vlm stub rows
+    table = kv.register_prefill(0, (1, 2))              # 2+3 rows -> 2 pages
+    assert len(table) == 2 and kv.rows(0) == 5
+
+
+def test_share_maps_donor_pages_and_refcounts():
+    kv = make_kv(page_size=4)
+    key = (1, 2, 3, 4, 5)
+    t0 = kv.register_prefill(0, key)
+    assert kv.find_donor(key) == 0
+    kv.share(1, 0, key)
+    assert kv.tables[1] == t0
+    assert all(kv.pool.refcount[p] == 2 for p in t0)
+    assert kv.stats.prefill_tokens_saved == 5
+    kv.release_seq(0)
+    assert all(kv.pool.refcount[p] == 1 for p in t0)    # shared pages live on
+    kv.release_seq(1)
+    assert kv.pool.pages_in_use == 0
+    kv.check_invariants()
+
+
+def test_donor_invalidated_after_release():
+    kv = make_kv()
+    key = (7, 8, 9)
+    kv.register_prefill(0, key)
+    kv.release_seq(0)
+    assert kv.find_donor(key) is None
+
+
+def test_in_batch_then_cross_batch_donor_chain():
+    kv = make_kv(num_pages=17)
+    key = (1, 1, 1, 1)
+    kv.register_prefill(0, key)
+    kv.share(1, 0, key)
+    kv.release_seq(0)                    # follower keeps the pages alive
+    donor = kv.find_donor(key)
+    assert donor == 1                    # follower is registered as donor too
+    kv.share(2, donor, key)
+    kv.release_many([1, 2])
+    assert kv.pool.pages_in_use == 0
+
+
+# -- copy-on-write ------------------------------------------------------------
+
+def test_prepare_step_cow_on_shared_write_page():
+    kv = make_kv(page_size=4)
+    key = (1, 2, 3, 4, 5, 6)             # 6 rows: page 0 full, page 1 partial
+    kv.register_prefill(0, key)
+    kv.share(1, 0, key)
+    kv.share(2, 0, key)
+    # all three write position 6 -> logical block 1 (the shared partial page)
+    copies = kv.prepare_step([0, 1, 2], [6, 6, 6])
+    assert len(copies) == 2 and kv.stats.cow_copies == 2
+    pages = [kv.tables[u][1] for u in (0, 1, 2)]
+    assert len(set(pages)) == 3          # exclusively owned now
+    assert all(kv.pool.refcount[p] == 1 for p in pages)
+    # the full prefix page stays shared
+    assert kv.pool.refcount[kv.tables[0][0]] == 3
+    kv.check_invariants()
+
+
+def test_prepare_step_appends_fresh_page_at_boundary():
+    kv = make_kv(page_size=4)
+    kv.register_prefill(0, (1, 2, 3, 4))        # exactly one page
+    copies = kv.prepare_step([0], [4])          # next write: new block
+    assert copies == [] and len(kv.tables[0]) == 2
+    kv.check_invariants()
+
+
+def test_append_tokens_extends_committed_prefix():
+    kv = make_kv()
+    kv.register_prefill(0, (1, 2))
+    kv.append_tokens([0], [3])
+    assert kv.tokens[0] == [1, 2, 3] and kv.rows(0) == 3
+
+
+# -- residency / resume / eviction -------------------------------------------
+
+def test_resume_exact_and_trimmed():
+    kv = make_kv(page_size=4)
+    kv.register_prefill(0, (1, 2, 3, 4, 5, 6, 7))       # 2 pages
+    kv.deactivate(0)
+    # partial-mode resume: exact committed prefix
+    assert kv.try_resume(0, (1, 2, 3, 4, 5, 6, 7))
+    kv.deactivate(0)
+    # on-policy re-roll: prompt prefix of the resident sequence -> trim
+    assert kv.try_resume(0, (1, 2, 3))
+    assert len(kv.tables[0]) == 1 and kv.tokens[0] == [1, 2, 3]
+    assert kv.stats.resumed_without_prefill == 2
+    kv.check_invariants()
+
+
+def test_resume_mismatch_drops_stale_pages():
+    kv = make_kv()
+    kv.register_prefill(0, (1, 2, 3))
+    kv.deactivate(0)
+    assert not kv.try_resume(0, (9, 9, 9))
+    assert 0 not in kv.tables and kv.pool.pages_in_use == 0
+
+
+def test_eviction_is_lru_and_spares_active():
+    kv = make_kv(num_pages=4, page_size=4)               # 3 usable pages
+    kv.register_prefill(0, (1, 1, 1))
+    kv.register_prefill(1, (2, 2, 2))
+    kv.deactivate(0)
+    kv.deactivate(1)
+    kv.register_prefill(2, (3, 3, 3))                    # pool full
+    kv.register_prefill(3, (4, 4, 4))                    # evicts uid 0 (LRU)
+    assert kv.stats.evictions == 1
+    assert 0 not in kv.tables and 1 in kv.tables
+    kv.register_prefill(4, (5, 5, 5))                    # evicts uid 1
+    assert 1 not in kv.tables
+    # only active sequences remain -> nothing evictable -> exhausted
+    with pytest.raises(PoolExhausted):
+        kv.register_prefill(5, (6, 6, 6))
+
+
+def test_shared_pages_survive_donor_eviction():
+    kv = make_kv(num_pages=3, page_size=4)               # 2 usable pages
+    kv.register_prefill(0, (1, 2, 3, 4, 5, 6))           # 2 pages: A, B
+    kv.share(1, 0, (1, 2, 3, 4))                         # prefix page A only
+    kv.deactivate(0)
+    # pool is full; a new prefill evicts resident 0: its unshared page B
+    # is freed, the shared page A survives with uid 1's reference
+    kv.register_prefill(2, (7, 7, 7))
+    assert kv.stats.evictions == 1
+    assert 0 not in kv.tables
+    assert kv.tokens[1] == [1, 2, 3, 4]
+    assert kv.pool.refcount[kv.tables[1][0]] == 1
+    kv.check_invariants()
+
+
+# -- block tables -------------------------------------------------------------
+
+def test_block_table_pads_with_garbage():
+    kv = make_kv(page_size=4)
+    t0 = kv.register_prefill(0, (1, 2, 3, 4, 5))         # 2 pages
+    bt = kv.block_table([0, -1], n_blocks=4)
+    assert bt.shape == (2, 4)
+    assert list(bt[0, :2]) == t0
+    assert (bt[0, 2:] == GARBAGE_PAGE).all()
+    assert (bt[1] == GARBAGE_PAGE).all()                 # inactive slot
+    assert kv.max_blocks([0]) == 2

@@ -3,7 +3,6 @@ sanity, capacity-drop behaviour."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import get_smoke_config
 from repro.models import moe as MOE

@@ -4,7 +4,6 @@ checks on the local mesh."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.buffer import Mode
 
