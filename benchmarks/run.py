@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fill_policy/*       beyond-paper slot-fill study
   policy_sweep/*      every registered SchedulerPolicy, by name
   prefix_share/*      paged-KV-cache GRPO prefix sharing + resume rows
+  replicas/*          EngineGroup data-parallel rollout: bubble vs replicas
   fig3_logic_rl/*     real RL token-efficiency on K&K (Fig. 3, quick mode)
   roofline_table/*    per (arch x shape) roofline terms (§Roofline)
 
@@ -93,7 +94,8 @@ def json_path_from_argv(argv) -> str:
 
 def main() -> None:
     from benchmarks import (bench_ablation, bench_breakdown, bench_logic_rl,
-                            bench_prefix_share, bench_throughput, roofline)
+                            bench_prefix_share, bench_replicas,
+                            bench_throughput, roofline)
     json_path = json_path_from_argv(sys.argv)
     smoke = "--smoke" in sys.argv
     if smoke:
@@ -104,12 +106,14 @@ def main() -> None:
                     ("ablation", bench_ablation.main),
                     ("prefix_share",
                      lambda: bench_prefix_share.main(smoke=True)),
+                    ("replicas", lambda: bench_replicas.main(smoke=True)),
                     ("quickstart", lambda: [quickstart_smoke_row()]))
     else:
         sections = (("breakdown", bench_breakdown.main),
                     ("throughput", bench_throughput.main),
                     ("ablation", bench_ablation.main),
                     ("prefix_share", bench_prefix_share.main),
+                    ("replicas", bench_replicas.main),
                     ("quickstart", lambda: [quickstart_smoke_row()]),
                     ("roofline", roofline.main))
     rows = []

@@ -295,7 +295,17 @@ class PagedKVCache:
         physical page table (for the engine to copy KV rows into)."""
         assert uid not in self.tables, uid
         need = self._pages_for_rows(len(key) + self.extra_rows)
-        self.tables[uid] = [self._alloc() for _ in range(need)]
+        pages: List[int] = []
+        try:
+            for _ in range(need):
+                pages.append(self._alloc())
+        except PoolExhausted:
+            # roll back the partial allocation — a failed submit must not
+            # leak pages (refcount > 0 with no owning table)
+            for page in pages:
+                self.pool.release(page)
+            raise
+        self.tables[uid] = pages
         self.tokens[uid] = list(key)
         self._seq_version[uid] = self.version
         self._active.add(uid)

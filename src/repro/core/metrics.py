@@ -24,6 +24,10 @@ class RolloutMetrics:
     # paged-KV-cache gauges (zero for engines without a page pool)
     prefill_tokens_saved: int = 0   # prefix sharing + resume-without-reprefill
     page_occupancy_peak: float = 0.0
+    # multi-replica (EngineGroup) gauges — zero for single engines
+    steal_count: int = 0            # resumes migrated off their home replica
+    replica_busy: float = 0.0       # time-weighted mean busy-replica count
+    replica_bubble_ratio: float = 0.0   # per-replica Eq. 4 on busy replicas
 
     def record(self, running: int, dt: float, new_tokens: int = 0) -> None:
         if dt > 0:
@@ -42,6 +46,14 @@ class RolloutMetrics:
             self.prefill_tokens_saved, int(stats.get("prefill_tokens_saved", 0)))
         self.page_occupancy_peak = max(
             self.page_occupancy_peak, float(stats.get("page_occupancy", 0.0)))
+        # EngineGroup gauges: cumulative counter (max of snapshots) and
+        # running ratios (latest snapshot wins)
+        self.steal_count = max(self.steal_count,
+                               int(stats.get("steal_count", 0)))
+        if "replica_busy" in stats:
+            self.replica_busy = float(stats["replica_busy"])
+        if "replica_bubble_ratio" in stats:
+            self.replica_bubble_ratio = float(stats["replica_bubble_ratio"])
 
     @property
     def elapsed(self) -> float:
@@ -73,6 +85,10 @@ class RolloutMetrics:
         self.prefill_tokens_saved += other.prefill_tokens_saved
         self.page_occupancy_peak = max(self.page_occupancy_peak,
                                        other.page_occupancy_peak)
+        self.steal_count += other.steal_count
+        self.replica_busy = max(self.replica_busy, other.replica_busy)
+        self.replica_bubble_ratio = max(self.replica_bubble_ratio,
+                                        other.replica_bubble_ratio)
 
     def summary(self) -> dict:
         return {
@@ -86,4 +102,7 @@ class RolloutMetrics:
             "updates_gated": self.updates_gated,
             "prefill_tokens_saved": self.prefill_tokens_saved,
             "page_occupancy_peak": round(self.page_occupancy_peak, 4),
+            "steal_count": self.steal_count,
+            "replica_busy": round(self.replica_busy, 3),
+            "replica_bubble_ratio": round(self.replica_bubble_ratio, 4),
         }

@@ -44,14 +44,38 @@ class SortedRLConfig:
     group_size: int = 4               # n — batches per group (n*b prompts)
     update_batch: int = 128           # trajectories per trainer update
     max_gen_len: int = 4096
-    # harvest when this many trajectories are ready (defaults to
-    # update_batch); `None` disables early termination (baseline).
+    # harvest when this many trajectories are ready.  None (default)
+    # resolves to update_batch; an explicit 0 means "harvest after every
+    # decode step" (maximum scavenging pressure — sensible only with
+    # Mode.PARTIAL, where progress survives the interrupt; an on-policy
+    # re-roll would discard its single new token forever).
     harvest_threshold: Optional[int] = None
     # train on leftover (< update_batch) trajectories at group end
     train_leftover: bool = True
+    # engine replicas behind the orchestrator (EngineGroup when > 1);
+    # consumed by session/benchmark builders — the orchestrator itself
+    # only ever sees the merged EngineProtocol surface
+    num_replicas: int = 1
+
+    def __post_init__(self):
+        if self.harvest_threshold is not None and self.harvest_threshold < 0:
+            raise ValueError(
+                f"harvest_threshold must be >= 0 or None, "
+                f"got {self.harvest_threshold}")
+        if self.harvest_threshold == 0 and Mode(self.mode) == Mode.ON_POLICY:
+            # livelock: every step would interrupt all entries and the
+            # on-policy scavenge discards their single new token, so no
+            # prompt needing >1 token can ever finish
+            raise ValueError(
+                "harvest_threshold=0 requires Mode.PARTIAL (on-policy "
+                "scavenging would discard every step's progress forever)")
 
     def resolved_threshold(self) -> int:
-        return self.harvest_threshold or self.update_batch
+        # NOT `or`: an explicit harvest_threshold=0 must stay 0 instead of
+        # silently coercing to update_batch
+        if self.harvest_threshold is None:
+            return self.update_batch
+        return self.harvest_threshold
 
 
 @dataclasses.dataclass

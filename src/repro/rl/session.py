@@ -36,6 +36,7 @@ from repro.models.model import Model, build_model
 from repro.rl.losses import LossConfig
 from repro.rl.trainer import RLTrainer
 from repro.rollout.engine import SlotEngine
+from repro.rollout.group import EngineGroup
 from repro.rollout.sim import SimEngine
 from repro.train.optimizer import AdamWConfig
 
@@ -153,6 +154,10 @@ class SessionConfig:
     policy: str = "sorted"            # scheduling-policy registry key
     policy_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
     engine: str = "slot"              # slot (real decode) | sim (scheduling)
+    # data-parallel rollout: shard rollout_batch slots over this many
+    # engine replicas behind an EngineGroup (1 = plain single engine)
+    num_replicas: int = 1
+    balancer: str = "least_tokens"    # EngineGroup routing (group.py registry)
     mode: Mode = Mode.ON_POLICY
     rollout_batch: int = 32           # engine capacity (slots)
     group_size: int = 2
@@ -233,9 +238,23 @@ class RLSession:
                               update_batch=cfg.update_batch,
                               max_gen_len=cfg.max_gen_len,
                               harvest_threshold=cfg.harvest_threshold,
-                              train_leftover=cfg.train_leftover)
+                              train_leftover=cfg.train_leftover,
+                              num_replicas=cfg.num_replicas)
         evals: List[Dict] = []
         sched_history: List[Dict] = []
+
+        def replicated(build_one):
+            """`rollout_batch` slots as one engine or an EngineGroup of
+            `num_replicas` equal shards (each with its own KV memory)."""
+            n = cfg.num_replicas
+            if n < 1 or cfg.rollout_batch % n != 0:
+                raise ValueError(
+                    f"rollout_batch={cfg.rollout_batch} must split evenly "
+                    f"over num_replicas={n}")
+            if n == 1:
+                return build_one(0, cfg.rollout_batch)
+            return EngineGroup([build_one(i, cfg.rollout_batch // n)
+                                for i in range(n)], balancer=cfg.balancer)
 
         if cfg.engine == "slot":
             model = build_model(tiny_lm_config(len(vocab), cfg.d_model,
@@ -260,14 +279,13 @@ class RLSession:
             # paper's cache mechanism; recorded logprobs stay exact as
             # pi_old); on-policy re-rolls must re-prefill under the fresh
             # policy, or the prompt KV would bias the new rollouts
-            engine = SlotEngine(model, trainer.params,
-                                capacity=cfg.rollout_batch,
-                                max_total_len=cfg.max_total_len,
-                                max_gen_len=cfg.max_gen_len,
-                                eos_id=vocab.eos_id, pad_id=vocab.pad_id,
-                                temperature=cfg.temperature, seed=cfg.seed,
-                                kv_retain_across_sync=(
-                                    Mode(cfg.mode) == Mode.PARTIAL))
+            engine = replicated(lambda i, cap: SlotEngine(
+                model, trainer.params, capacity=cap,
+                max_total_len=cfg.max_total_len,
+                max_gen_len=cfg.max_gen_len,
+                eos_id=vocab.eos_id, pad_id=vocab.pad_id,
+                temperature=cfg.temperature, seed=cfg.seed + i,
+                kv_retain_across_sync=(Mode(cfg.mode) == Mode.PARTIAL)))
             eval_gen = spec.make_generator(9999)
             eval_set = eval_gen.batch(cfg.eval_size)
 
@@ -291,9 +309,9 @@ class RLSession:
         elif cfg.engine == "sim":
             # scheduling-only: discrete-event engine, batch-stats trainer
             gen = spec.make_generator(cfg.seed)
-            engine = SimEngine(capacity=cfg.rollout_batch,
-                               max_gen_len=cfg.max_gen_len, seed=cfg.seed,
-                               **cfg.sim_kwargs)
+            engine = replicated(lambda i, cap: SimEngine(
+                capacity=cap, max_gen_len=cfg.max_gen_len, seed=cfg.seed + i,
+                **cfg.sim_kwargs))
 
             def train_fn(req: UpdateRequest) -> UpdateResult:
                 lens = [e.gen_len for e in req.entries]

@@ -1,0 +1,461 @@
+"""Data-parallel rollout: an EngineProtocol facade over N engine replicas.
+
+The paper's headline bubble-ratio win gets interesting once rollout is
+sharded across multiple engine instances: the long tail of ONE replica
+stalls the whole group barrier (Seer's "global load balancing" problem,
+RollPacker's tail-rank rebalancing).  :class:`EngineGroup` makes a set of
+replicas — SimEngine, SlotEngine, or any other
+:class:`~repro.core.engine_api.EngineProtocol` backend, each with its own
+KV memory — look like ONE engine, so :class:`RolloutOrchestrator`, every
+registered :class:`SchedulerPolicy`, and both conformance suites run
+against it unchanged.
+
+Routing
+-------
+``submit`` routes each entry through a pluggable **balancer** (string
+registry, mirroring the policy registry):
+
+* ``least_tokens`` (default) — length-aware: pick the replica with the
+  least *estimated outstanding decode tokens*.  The estimate uses the
+  same signal the scheduling policies' length keys use — tokens already
+  generated (``entry.gen_len``) against an EWMA of observed completion
+  lengths — or a caller-supplied ``length_hint(entry)``;
+* ``least_loaded`` — fallback when no length signal is wanted: pick the
+  replica with the fewest active slots (ties by free slots);
+* ``round_robin`` — strawman for the benchmarks.
+
+Two affinities run *before* the balancer:
+
+* **home affinity** — an entry that already lives on a replica (it was
+  interrupted there and its KV pages are resident) is routed back home,
+  so a scavenged entry resumes with ZERO re-prefill exactly as it would
+  on a single paged engine.  When the home replica has no free slot the
+  entry migrates to another replica (work stealing — correct, but the
+  new replica must re-prefill); each migration is counted in
+  ``steal_count``;
+* **prefix affinity** — entries of one submit batch that share a prefill
+  prefix (a GRPO group) are co-routed so the group's prefix-sharing
+  machinery keeps its (G-1)/G prefill saving; cross-batch, a replica
+  already holding a donor for the prefix attracts the entry.
+
+Merging
+-------
+``step()`` steps every busy replica and concatenates the per-replica
+event streams in replica order.  Each replica emits in ascending slot
+order, so the merged order is deterministic and stable for as long as a
+request stays resident — the EngineProtocol event-order contract holds
+for the group verbatim.
+
+Accounting
+----------
+The group keeps per-replica busy integrals on *replica-local* clocks:
+
+* ``replica_bubble_ratio`` — Eq. 4 evaluated per replica and summed:
+  idle-slot time on replicas that are actually running, over their
+  running time.  A fully idle replica contributes nothing (a drained
+  instance can be released or reassigned — the Seer fleet view), so this
+  isolates the waste load balancing can actually fix;
+* ``replica_busy`` — time-weighted mean number of busy replicas;
+* ``steal_count`` — cumulative home-affinity misses (migrations).
+
+``cache_stats()`` aggregates these with the per-replica paged-KV
+counters (``stale_kv_reuses`` et al summed across replicas), so the
+orchestrator's existing ``record_cache`` plumbing surfaces them as
+RolloutMetrics fields; ``replica_stats()`` keeps the per-replica detail.
+"""
+from __future__ import annotations
+
+from typing import (Callable, Dict, List, Optional, Sequence, Tuple)
+
+from repro.core.buffer import BufferEntry
+from repro.core.engine_api import EngineProtocol, SlotTable, StepEvent
+
+# -----------------------------------------------------------------------------
+# balancer registry
+# -----------------------------------------------------------------------------
+
+# pick(group, entry, free) -> replica index; `free` is the remaining free
+# slots per replica for THIS submit batch (the group decrements as it
+# assigns, so balancers never see an already-full replica as available)
+Balancer = Callable[["EngineGroup", BufferEntry, List[int]], int]
+
+_BALANCERS: Dict[str, Callable[..., Balancer]] = {}
+
+
+def register_balancer(name: str):
+    def deco(factory):
+        _BALANCERS[name] = factory
+        return factory
+    return deco
+
+
+def make_balancer(name: str, **kwargs) -> Balancer:
+    if name not in _BALANCERS:
+        raise KeyError(f"unknown balancer {name!r}; "
+                       f"registered: {available_balancers()}")
+    return _BALANCERS[name](**kwargs)
+
+
+def available_balancers() -> List[str]:
+    return sorted(_BALANCERS)
+
+
+@register_balancer("least_tokens")
+def least_tokens_balancer() -> Balancer:
+    """Length-aware default: least estimated outstanding decode tokens.
+    Occupancy ties break on ``capacity - free``, which (unlike the live
+    active counts) already reflects this batch's earlier assignments."""
+    def pick(group: "EngineGroup", entry: BufferEntry,
+             free: List[int]) -> int:
+        return min((i for i in range(len(free)) if free[i] > 0),
+                   key=lambda i: (group.load[i],
+                                  group.replicas[i].capacity - free[i], i))
+    return pick
+
+
+@register_balancer("least_loaded")
+def least_loaded_balancer() -> Balancer:
+    """Length-blind fallback: fewest occupied slots.  Occupancy is
+    ``capacity - free`` so in-batch assignments (only visible through
+    the decremented ``free``) count — the replicas themselves are not
+    submitted to until routing finishes."""
+    def pick(group: "EngineGroup", entry: BufferEntry,
+             free: List[int]) -> int:
+        return min((i for i in range(len(free)) if free[i] > 0),
+                   key=lambda i: (group.replicas[i].capacity - free[i], i))
+    return pick
+
+
+@register_balancer("round_robin")
+def round_robin_balancer() -> Balancer:
+    """Benchmark strawman: cycle replicas, skipping full ones."""
+    state = {"next": 0}
+
+    def pick(group: "EngineGroup", entry: BufferEntry,
+             free: List[int]) -> int:
+        n = len(free)
+        for k in range(n):
+            i = (state["next"] + k) % n
+            if free[i] > 0:
+                state["next"] = (i + 1) % n
+                return i
+        raise AssertionError("round_robin: no free replica")
+    return pick
+
+
+# -----------------------------------------------------------------------------
+# the group
+# -----------------------------------------------------------------------------
+
+# affinity records kept per slot of group capacity: uids that were
+# scavenged and trained (never resubmitted) must not grow _home forever
+HOME_RETENTION_FACTOR = 4
+
+
+class EngineGroup:
+    """N engine replicas behind the single-engine EngineProtocol surface."""
+
+    def __init__(self, replicas: Sequence[EngineProtocol],
+                 balancer: "str | Balancer" = "least_tokens",
+                 length_hint: Optional[Callable[[BufferEntry], float]] = None):
+        assert replicas, "EngineGroup needs at least one replica"
+        self.replicas = list(replicas)
+        self.capacity = sum(r.capacity for r in self.replicas)
+        self.balancer = (make_balancer(balancer)
+                         if isinstance(balancer, str) else balancer)
+        self.length_hint = length_hint
+        self.version = 0
+        n = len(self.replicas)
+        # group wall clock: replicas run concurrently, so each submit /
+        # step / sync advances the group by the MAX of the per-replica
+        # clock deltas it caused (monotone by construction).  Taking the
+        # running max of raw replica clocks instead would freeze while a
+        # drained fast replica holds the max and lump-attribute laggards'
+        # busy time later — distorting every dt the orchestrator records.
+        self._clock = max(r.clock for r in self.replicas)
+        # routing state
+        self._home: Dict[int, int] = {}        # uid -> replica index
+        self._est: Dict[int, float] = {}       # uid -> est remaining tokens
+        self._gen_total: Dict[int, int] = {}   # uid -> generated incl prefix
+        self.load: List[float] = [0.0] * n     # sum of _est per replica
+        self.steal_count = 0
+        self._ewma_len: Optional[float] = None  # observed completion length
+        self._max_gen = max((getattr(r, "max_gen_len", 0)
+                             for r in self.replicas), default=0) or 1024
+        # per-replica busy integrals over replica-local stepped time
+        self._busy_time = [0.0] * n            # sum busy_slots * dt
+        self._cap_time = [0.0] * n             # sum capacity   * dt
+        self._busy_replicas_time = 0.0         # sum busy_replica_count * dt
+        self._stepped_time = 0.0               # sum group-step dt (max over r)
+
+    # -- protocol: time & slot queries ------------------------------------
+
+    @property
+    def clock(self) -> float:
+        """Modeled-concurrent group wall clock (see __init__)."""
+        return self._clock
+
+    def free_slots(self) -> int:
+        return sum(r.free_slots() for r in self.replicas)
+
+    def active_uids(self) -> List[int]:
+        out: List[int] = []
+        for r in self.replicas:
+            out.extend(r.active_uids())
+        return out
+
+    @property
+    def active_counts(self) -> List[int]:
+        return [len(r.active_uids()) for r in self.replicas]
+
+    @property
+    def slots(self) -> SlotTable:
+        """Read-only aggregate host-state snapshot: the replicas' SlotTable
+        rows concatenated in replica order (mutations do not propagate)."""
+        view = SlotTable(self.capacity)
+        off = 0
+        for r in self.replicas:
+            t = r.slots
+            for name in ("uid", "active", "next_token", "kv_len", "kv_start",
+                         "gen_count", "gen_budget"):
+                getattr(view, name)[off:off + t.capacity] = getattr(t, name)
+            off += t.capacity
+        return view
+
+    # -- routing ----------------------------------------------------------
+
+    def _hint(self, entry: BufferEntry) -> float:
+        if self.length_hint is not None:
+            return max(1.0, float(self.length_hint(entry)))
+        expect = (self._ewma_len if self._ewma_len is not None
+                  else 0.5 * self._max_gen)
+        return max(1.0, expect - entry.gen_len)
+
+    def _prefill_key(self, entry: BufferEntry) -> Tuple[int, ...]:
+        seq = list(entry.prompt) + list(entry.generated)
+        return tuple(seq[:-1])
+
+    def _remember_home(self, uid: int, replica: int) -> None:
+        """Record the uid's home (insertion order doubles as recency) and
+        bound the map: consumed-without-resume uids would otherwise leak
+        one record per scavenged trajectory for the engine's lifetime."""
+        self._home.pop(uid, None)
+        self._home[uid] = replica
+        cap = HOME_RETENTION_FACTOR * self.capacity
+        if len(self._home) <= cap:
+            return
+        live = set(self.active_uids())
+        for u in list(self._home):
+            if len(self._home) <= cap:
+                break
+            if u in live:
+                continue
+            # forgetting a home abandons any KV still resident there —
+            # drop it (same reasoning as the steal path) instead of
+            # letting dead pages crowd the pool until LRU reaches them
+            kv = getattr(self.replicas[self._home[u]], "kv", None)
+            if kv is not None:
+                kv.release_seq(u)
+            del self._home[u]
+
+    def _resident_replica(self, key: Tuple[int, ...]) -> Optional[int]:
+        """Replica already holding a donor for this prefill prefix."""
+        for i, r in enumerate(self.replicas):
+            kv = getattr(r, "kv", None)
+            if kv is not None and kv.find_donor(key) is not None:
+                return i
+        return None
+
+    def _route(self, entry: BufferEntry, free: List[int],
+               key_dest: Dict[Tuple[int, ...], int]) -> int:
+        home = self._home.get(entry.uid)
+        if home is not None:
+            if free[home] > 0:
+                return home
+            self.steal_count += 1          # migrate: home replica is full
+            # the thief re-prefills, so any KV left resident on the old
+            # home is dead weight — drop it instead of letting it crowd
+            # the pool until LRU pressure gets to it
+            kv = getattr(self.replicas[home], "kv", None)
+            if kv is not None:
+                kv.release_seq(entry.uid)
+        key = self._prefill_key(entry)
+        if key:      # an empty prefix is never shared — don't co-route on it
+            dest = key_dest.get(key)
+            if dest is None:
+                dest = self._resident_replica(key)
+            if dest is not None and free[dest] > 0:
+                return dest
+        return self.balancer(self, entry, free)
+
+    # -- protocol: submit / step / interrupt / sync -----------------------
+
+    def submit(self, entries: Sequence[BufferEntry], version: int) -> None:
+        if not entries:
+            return
+        free = [r.free_slots() for r in self.replicas]
+        assert len(entries) <= sum(free), "not enough free slots"
+        batches: List[List[BufferEntry]] = [[] for _ in self.replicas]
+        key_dest: Dict[Tuple[int, ...], int] = {}
+        # two passes: home-affine (previously-seen) entries claim their
+        # home slots FIRST, so a fresh entry earlier in the caller's
+        # order cannot take the last free slot of a resumable entry's
+        # home replica and force an avoidable steal
+        order = sorted(range(len(entries)),
+                       key=lambda j: entries[j].uid not in self._home)
+        for j in order:
+            e = entries[j]
+            i = self._route(e, free, key_dest)
+            assert free[i] > 0, (i, free)
+            free[i] -= 1
+            key = self._prefill_key(e)
+            if key:
+                key_dest.setdefault(key, i)
+            batches[i].append(e)
+            # account the assignment NOW so the balancer sees in-batch
+            # routing decisions, not just the pre-submit loads
+            est = self._hint(e)
+            self._remember_home(e.uid, i)
+            self._est[e.uid] = est
+            self._gen_total[e.uid] = e.gen_len
+            self.load[i] += est
+        dt_group = 0.0
+        for i, batch in enumerate(batches):
+            if batch:
+                t0 = self.replicas[i].clock
+                self.replicas[i].submit(batch, version)
+                dt_group = max(dt_group, self.replicas[i].clock - t0)
+        self._clock += dt_group        # per-replica prefills run concurrently
+
+    def step(self) -> List[StepEvent]:
+        events: List[StepEvent] = []
+        dt_group = 0.0
+        busy_replicas = 0
+        for i, r in enumerate(self.replicas):
+            if not r.active_uids():
+                continue
+            t0 = r.clock
+            evs = r.step()
+            dt = r.clock - t0
+            busy_replicas += 1
+            dt_group = max(dt_group, dt)
+            self._busy_time[i] += len(evs) * dt
+            self._cap_time[i] += r.capacity * dt
+            for ev in evs:
+                if self._est.get(ev.uid, 0.0) >= 1.0:
+                    self._est[ev.uid] -= 1.0
+                    self.load[i] -= 1.0
+                self._gen_total[ev.uid] = self._gen_total.get(ev.uid, 0) + 1
+                if ev.done:
+                    self._finish(ev.uid, i)
+            events.extend(evs)
+        self._busy_replicas_time += busy_replicas * dt_group
+        self._stepped_time += dt_group
+        self._clock += dt_group        # lockstep step: replicas overlap
+        return events
+
+    def _finish(self, uid: int, replica: int) -> None:
+        total = self._gen_total.pop(uid, 0)
+        self._ewma_len = (float(total) if self._ewma_len is None
+                          else 0.9 * self._ewma_len + 0.1 * total)
+        self.load[replica] -= self._est.pop(uid, 0.0)
+        self.load[replica] = max(0.0, self.load[replica])
+        self._home.pop(uid, None)
+
+    def interrupt(self, uids: Optional[Sequence[int]] = None) -> List[int]:
+        out: List[int] = []
+        for i, r in enumerate(self.replicas):
+            got = r.interrupt(uids)
+            for uid in got:
+                # keep _home: resident pages make this replica the uid's
+                # zero-re-prefill resume target
+                self.load[i] -= self._est.pop(uid, 0.0)
+                self.load[i] = max(0.0, self.load[i])
+                self._gen_total.pop(uid, None)
+            out.extend(got)
+        return out
+
+    def sync_weights(self, version: int) -> None:
+        """Version-stamped broadcast: every replica syncs (its paged KV
+        stamps/invalidates per its retain_across_sync setting).  The
+        broadcasts overlap, so the group pays the slowest replica's
+        sync latency once."""
+        dt_group = 0.0
+        for r in self.replicas:
+            t0 = r.clock
+            r.sync_weights(version)
+            dt_group = max(dt_group, r.clock - t0)
+        self._clock += dt_group
+        self.version = version
+
+    # -- observability ----------------------------------------------------
+
+    @property
+    def replica_bubble_ratio(self) -> float:
+        """Per-replica Eq. 4, summed over replicas on replica-local time:
+        idle-slot time of *running* replicas over their running time.
+        Fully idle replicas count as released, not as bubble."""
+        cap = sum(self._cap_time)
+        if cap <= 0:
+            return 0.0
+        return (cap - sum(self._busy_time)) / cap
+
+    @property
+    def replica_busy(self) -> float:
+        """Time-weighted mean number of simultaneously busy replicas."""
+        if self._stepped_time <= 0:
+            return 0.0
+        return self._busy_replicas_time / self._stepped_time
+
+    def replica_stats(self) -> List[Dict[str, float]]:
+        """Per-replica detail behind the aggregated ``cache_stats()``."""
+        out = []
+        for i, r in enumerate(self.replicas):
+            cap = self._cap_time[i]
+            rec = {
+                "capacity": float(r.capacity),
+                "active": float(len(r.active_uids())),
+                "est_load": self.load[i],
+                "busy_time": self._busy_time[i],
+                "bubble_ratio": ((cap - self._busy_time[i]) / cap
+                                 if cap > 0 else 0.0),
+            }
+            sub = getattr(r, "cache_stats", None)
+            sub = sub() if sub is not None else None
+            if sub:
+                rec["stale_kv_reuses"] = sub.get("stale_kv_reuses", 0.0)
+                rec["prefill_tokens_saved"] = sub.get(
+                    "prefill_tokens_saved", 0.0)
+            out.append(rec)
+        return out
+
+    def cache_stats(self) -> Dict[str, float]:
+        """Group gauges + the replicas' paged-KV counters summed.
+
+        Always non-None (even over SimEngine replicas), so the
+        orchestrator's ``record_cache`` plumbing picks the group fields up
+        for any replica type."""
+        out: Dict[str, float] = {
+            "num_replicas": float(len(self.replicas)),
+            "steal_count": float(self.steal_count),
+            "replica_busy": self.replica_busy,
+            "replica_bubble_ratio": self.replica_bubble_ratio,
+        }
+        subs = []
+        for r in self.replicas:
+            fn = getattr(r, "cache_stats", None)
+            sub = fn() if fn is not None else None
+            if sub:
+                subs.append(sub)
+        if subs:
+            for key in ("prefill_tokens_run", "prefill_tokens_saved",
+                        "shared_prefills", "resumed_without_prefill",
+                        "cow_copies", "evictions", "stale_kv_reuses",
+                        "pages_in_use", "pages_total", "resident_seqs"):
+                out[key] = float(sum(s.get(key, 0) for s in subs))
+            # saturation gauge: the WORST per-replica occupancy.  Pooling
+            # (sum in_use / sum total) would read ~0.4 while one skewed
+            # replica sits at 1.0 evicting resident KV.
+            out["page_occupancy"] = max(
+                float(s.get("page_occupancy", 0.0)) for s in subs)
+        return out

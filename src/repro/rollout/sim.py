@@ -65,13 +65,21 @@ class SimEngine:
     def __init__(self, capacity: int, max_gen_len: int = 8192,
                  cost: Optional[SimCostModel] = None,
                  length_sampler: Optional[Callable] = None,
-                 resample_on_reroll: bool = False, seed: int = 0):
+                 resample_on_reroll: bool = False, seed: int = 0,
+                 length_table: Optional[Dict[int, int]] = None):
         self.capacity = capacity
         self.max_gen_len = max_gen_len
         self.cost = cost or SimCostModel()
         self.length_sampler = length_sampler or lognormal_lengths(
             max_len=max_gen_len)
         self.resample_on_reroll = resample_on_reroll
+        # optional uid -> hidden length override.  Per-uid sampling draws
+        # from THIS engine's rng at submit time, so in a multi-replica
+        # setup the workload would depend on routing; a shared table
+        # pins each entry's length to the entry (a property of the
+        # prompt, not of the replica that happens to serve it), which is
+        # what balancer comparisons need.
+        self.length_table = length_table
         self.rng = random.Random(seed)
         self._clock = 0.0
         self.slots = SlotTable(capacity)
@@ -96,6 +104,8 @@ class SimEngine:
             self.version = version
 
     def _target(self, e: BufferEntry) -> int:
+        if self.length_table is not None and e.uid in self.length_table:
+            return self.length_table[e.uid]
         if e.uid not in self._target_by_uid or (
                 self.resample_on_reroll and not e.generated):
             self._target_by_uid[e.uid] = self.length_sampler(self.rng)

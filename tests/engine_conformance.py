@@ -100,8 +100,30 @@ def make_slot_dense(capacity=CAPACITY, max_gen=MAX_GEN, eos_id=-1):
                       paged=False)
 
 
+def make_group_sim(capacity=CAPACITY, max_gen=MAX_GEN, n_replicas=2):
+    """EngineGroup over SimEngine replicas (distinct seeds, shared total
+    capacity) — the multi-replica facade must satisfy the whole contract."""
+    from repro.rollout.group import EngineGroup
+    assert capacity % n_replicas == 0
+    return EngineGroup([SimEngine(capacity=capacity // n_replicas,
+                                  max_gen_len=max_gen, seed=i)
+                        for i in range(n_replicas)])
+
+
+def make_group_slot(capacity=CAPACITY, max_gen=MAX_GEN, eos_id=-1,
+                    n_replicas=2, **kw):
+    """EngineGroup over paged SlotEngine replicas, each with its own
+    page pool."""
+    from repro.rollout.group import EngineGroup
+    assert capacity % n_replicas == 0
+    return EngineGroup([make_slot(capacity=capacity // n_replicas,
+                                  max_gen=max_gen, eos_id=eos_id, **kw)
+                        for _ in range(n_replicas)])
+
+
 ENGINES = [("sim", make_sim), ("slot", make_slot),
-           ("slot_dense", make_slot_dense), ("slot_left", make_slot_left)]
+           ("slot_dense", make_slot_dense), ("slot_left", make_slot_left),
+           ("group_sim", make_group_sim), ("group_slot", make_group_slot)]
 
 
 @pytest.fixture(params=[name for name, _ in ENGINES])
@@ -542,3 +564,138 @@ def test_paged_metrics_flow_through_orchestrator():
     s = orch.metrics.summary()
     assert s["prefill_tokens_saved"] == (CAPACITY - 1) * 2
     assert 0.0 < s["page_occupancy_peak"] <= 1.0
+
+
+# -- EngineGroup (multi-replica) cases ----------------------------------------
+#
+# The group fixtures above already run the whole EngineProtocol contract
+# against EngineGroup; these cases additionally pin the group-only
+# behaviour: deterministic event merging, conservation across the merge,
+# and home-affinity resume vs work-stealing migration.
+
+def test_group_event_merge_order_is_replica_major():
+    """Merged step events are the per-replica streams concatenated in
+    replica order (each ascending-slot), and per-uid routing is stable."""
+    eng = make_group_sim()
+    eng.submit(entries(CAPACITY), version=0)
+    by_replica = [list(r.active_uids()) for r in eng.replicas]
+    assert sorted(u for uids in by_replica for u in uids) == list(
+        range(CAPACITY))
+    expect = [u for uids in by_replica for u in uids]
+    evs = checked_step(eng)
+    assert [ev.uid for ev in evs] == expect
+    # stable while resident: the merged order only loses finished uids
+    while eng.active_uids():
+        live = set(eng.active_uids())
+        evs = checked_step(eng)
+        assert [ev.uid for ev in evs] == [u for u in expect if u in live]
+
+
+def test_group_conservation_across_replicas():
+    """Replica-failure-free conservation: with every replica healthy, an
+    oversubscribed workload drains with each uid finishing exactly once
+    across the merged streams, and the replica loads sum to the total."""
+    n = 3 * CAPACITY
+    eng = make_group_sim()
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    buf.load_prompts([[1, 2 + i % 7] for i in range(n)])
+    done_counts = {}
+    steps = 0
+    while buf.pending() or buf.running():
+        batch = buf.pending()[:eng.free_slots()]
+        if batch:
+            buf.mark_running([e.uid for e in batch])
+            eng.submit(batch, version=0)
+        assert sum(len(r.active_uids()) for r in eng.replicas) == \
+            len(buf.running())
+        for ev in checked_step(eng):
+            buf.record_tokens(ev.uid, [ev.token], [ev.logprob], 0)
+            if ev.done:
+                done_counts[ev.uid] = done_counts.get(ev.uid, 0) + 1
+                buf.mark_done(ev.uid, ev.finish_reason)
+        steps += 1
+        assert steps < 10_000
+    assert done_counts == {uid: 1 for uid in range(n)}
+    assert eng.free_slots() == CAPACITY
+    buf.check_invariants()
+
+
+def test_group_home_affinity_resume_zero_reprefill():
+    """Interrupted entries route back to their home replica where the KV
+    pages stayed resident: the group resumes them with ZERO re-prefill,
+    exactly like a single paged engine."""
+    eng = make_group_slot()
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    uids = buf.load_prompts([[1, 2, 3, 4, 5], [6, 7, 8, 9, 2]])
+    buf.mark_running(uids)
+    eng.submit(buf.running(), version=0)
+    homes = {u: dict(eng._home)[u] for u in uids}
+    assert sorted(homes.values()) == [0, 1], "balancer did not spread"
+    for _ in range(2):
+        for ev in checked_step(eng):
+            buf.record_tokens(ev.uid, [ev.token], [ev.logprob], 0)
+            if ev.done:
+                buf.mark_done(ev.uid, ev.finish_reason)
+    for uid in eng.interrupt():
+        buf.scavenge(uid)
+    st = eng.cache_stats()
+    run_before = st["prefill_tokens_run"]
+    assert st["resident_seqs"] == 2
+    resumed = buf.pending()
+    buf.mark_running([e.uid for e in resumed])
+    eng.submit(resumed, version=0)
+    st = eng.cache_stats()
+    assert st["prefill_tokens_run"] == run_before, "resume re-ran prefill"
+    assert st["resumed_without_prefill"] == len(resumed)
+    assert st["steal_count"] == 0
+    assert all(dict(eng._home)[u] == homes[u] for u in
+               [e.uid for e in resumed]), "resume left its home replica"
+    for ev in run_to_completion(eng):
+        buf.record_tokens(ev.uid, [ev.token], [ev.logprob], 0)
+        if ev.done:
+            buf.mark_done(ev.uid, ev.finish_reason)
+    buf.check_invariants()
+    for r in eng.replicas:
+        r.kv.check_invariants()
+
+
+def test_group_steal_migrates_when_home_is_full():
+    """Work stealing: a scavenged entry whose home replica is saturated
+    migrates to another replica (counted in steal_count), re-prefills
+    there, and still finishes within its budget."""
+    eng = make_group_slot()
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    uids = buf.load_prompts([[1, 2, 3, 4, 5], [6, 7, 8, 9, 2]])
+    buf.mark_running(uids)
+    eng.submit(buf.running(), version=0)
+    home0 = dict(eng._home)[uids[0]]
+    for _ in range(2):
+        for ev in checked_step(eng):
+            buf.record_tokens(ev.uid, [ev.token], [ev.logprob], 0)
+            if ev.done:
+                buf.mark_done(ev.uid, ev.finish_reason)
+    for uid in eng.interrupt():
+        buf.scavenge(uid)
+    # saturate uid0's home replica with fresh work
+    fillers = [BufferEntry(uid=100 + i, prompt=[3, 1, 4, 1 + i])
+               for i in range(3)]
+    eng.submit(fillers, version=0)
+    assert eng.replicas[home0].free_slots() == 0
+    run_before = eng.cache_stats()["prefill_tokens_run"]
+    victim = buf.entries[uids[0]]
+    prefix = victim.gen_len
+    buf.mark_running([victim.uid])
+    eng.submit([victim], version=0)
+    st = eng.cache_stats()
+    assert st["steal_count"] == 1
+    assert dict(eng._home)[victim.uid] != home0, "steal stayed home"
+    assert st["prefill_tokens_run"] > run_before, \
+        "migrated resume cannot reuse the home replica's pages"
+    # the abandoned residency must be dropped, not left to rot in the
+    # old home's pool until LRU pressure reaches it
+    assert victim.uid not in eng.replicas[home0].kv.tables, \
+        "steal left dead resident pages on the old home replica"
+    new = sum(1 for ev in run_to_completion(eng) if ev.uid == victim.uid)
+    assert 1 <= prefix + new <= MAX_GEN
+    for r in eng.replicas:
+        r.kv.check_invariants()

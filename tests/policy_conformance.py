@@ -48,7 +48,35 @@ def make_slot_varied():
     return make_slot(eos_id=logic.VOCAB.eos_id)
 
 
-ENGINE_FACTORIES = {"sim": make_sim_varied, "slot": make_slot_varied}
+def make_group_sim_varied(n_replicas):
+    """EngineGroup over `n_replicas` SimEngine shards of the same total
+    capacity — the replica sweep: every policy must hold its contract
+    regardless of how rollout is sharded."""
+    from repro.rollout.group import EngineGroup
+
+    def factory():
+        return EngineGroup([
+            SimEngine(capacity=CAPACITY // n_replicas, max_gen_len=MAX_GEN,
+                      seed=i,
+                      length_sampler=lognormal_lengths(median=3, sigma=0.8,
+                                                       max_len=MAX_GEN))
+            for i in range(n_replicas)])
+    return factory
+
+
+def make_group_slot_varied():
+    # real-decode replica coverage: two paged SlotEngine shards
+    from engine_conformance import make_group_slot
+    from repro.data import logic
+    return make_group_slot(eos_id=logic.VOCAB.eos_id)
+
+
+ENGINE_FACTORIES = {"sim": make_sim_varied, "slot": make_slot_varied,
+                    # num_replicas sweep {1, 2, 4} (total capacity fixed)
+                    "group1_sim": make_group_sim_varied(1),
+                    "group2_sim": make_group_sim_varied(2),
+                    "group4_sim": make_group_sim_varied(4),
+                    "group2_slot": make_group_slot_varied}
 
 
 def prompts(n, start=0):

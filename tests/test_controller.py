@@ -162,3 +162,46 @@ def test_fill_policy_tradeoff():
                            sum(stale) / len(stale))
     assert results["fresh_first"][0] <= results["resume_first"][0] + 0.02
     assert results["fresh_first"][1] >= results["resume_first"][1] - 0.02
+
+
+def test_resolved_threshold_honors_zero_and_none_distinctly():
+    """harvest_threshold=0 must NOT coerce to update_batch (the old
+    `x or default` bug): None means "default to update_batch", 0 means
+    "harvest after every decode step"."""
+    assert SortedRLConfig(update_batch=64).resolved_threshold() == 64
+    assert SortedRLConfig(mode=Mode.PARTIAL, update_batch=64,
+                          harvest_threshold=0).resolved_threshold() == 0
+    assert SortedRLConfig(update_batch=64,
+                          harvest_threshold=16).resolved_threshold() == 16
+    # on-policy + threshold 0 would livelock (every step's progress is
+    # scavenged away); the config must refuse it outright
+    import pytest
+    with pytest.raises(ValueError):
+        SortedRLConfig(mode=Mode.ON_POLICY, harvest_threshold=0)
+    # negative thresholds are the same always-harvest footgun in disguise
+    with pytest.raises(ValueError):
+        SortedRLConfig(mode=Mode.PARTIAL, harvest_threshold=-1)
+
+
+def test_zero_harvest_threshold_scavenges_every_step_and_terminates():
+    """harvest_threshold=0 in partial mode: maximum scavenging pressure —
+    every rollout iteration is a single decode step followed by a full
+    interrupt — and the group still drains with conservation intact."""
+    from repro.core.orchestrator import RolloutOrchestrator
+    from repro.core.policy import make_policy
+    eng = SimEngine(capacity=8, max_gen_len=32, seed=3,
+                    length_sampler=lognormal_lengths(median=6, sigma=0.8,
+                                                     max_len=32))
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    cfg = SortedRLConfig(mode=Mode.PARTIAL, rollout_batch=8, group_size=2,
+                         update_batch=8, max_gen_len=32,
+                         harvest_threshold=0)
+    trained = []
+    orch = RolloutOrchestrator(eng, buf, cfg, make_policy("sorted"),
+                               lambda req: trained.extend(req.entries))
+    orch.run_group(_prompts(16, seed=3))
+    assert len(trained) == 16
+    assert orch.metrics.harvests >= orch.metrics.updates
+    # the old coercion made 0 behave like update_batch; with 0 honored,
+    # harvests vastly outnumber updates (one interrupt per decode step)
+    assert orch.metrics.harvests > 2 * orch.metrics.updates

@@ -1,0 +1,193 @@
+"""EngineGroup unit + regression tests beyond the shared conformance
+suite: balancer registry behaviour, greedy token-identity vs the single
+engine, replica metrics flowing through the orchestrator, and the
+session-level num_replicas wiring."""
+import pytest
+
+from engine_conformance import _tiny_model, make_group_sim
+from repro.core.buffer import BufferEntry, Mode, StatefulRolloutBuffer
+from repro.core.orchestrator import RolloutOrchestrator, SortedRLConfig
+from repro.core.policy import make_policy
+from repro.rollout.group import (EngineGroup, available_balancers,
+                                 make_balancer)
+from repro.rollout.sim import SimEngine
+
+
+def _greedy_slot(capacity):
+    from repro.rollout.engine import SlotEngine
+    t = _tiny_model()
+    return SlotEngine(t["model"], lambda: t["params"], capacity=capacity,
+                      max_total_len=64, max_gen_len=8, eos_id=-1,
+                      pad_id=t["pad"], temperature=0.0)
+
+
+def _drain_tokens(eng, entries):
+    toks = {e.uid: [] for e in entries}
+    eng.submit(entries, version=0)
+    steps = 0
+    while eng.active_uids():
+        for ev in eng.step():
+            toks[ev.uid].append(ev.token)
+        steps += 1
+        assert steps < 1000
+    return toks
+
+
+def _prompts(n):
+    return [[1, 2 + i % 5, 3, 4 + (i * 7) % 11] for i in range(n)]
+
+
+# -- balancer registry --------------------------------------------------------
+
+def test_balancer_registry_surface():
+    names = available_balancers()
+    for required in ("least_tokens", "least_loaded", "round_robin"):
+        assert required in names
+    with pytest.raises(KeyError):
+        make_balancer("no_such_balancer")
+
+
+def test_least_tokens_routes_away_from_heavy_replica():
+    """The length-aware default sends fresh work to the replica with the
+    least estimated outstanding tokens, not just the most free slots."""
+    eng = make_group_sim()
+    # occupy replica 0 with one entry: its est load is now positive
+    eng.submit([BufferEntry(uid=0, prompt=[1, 2, 3])], version=0)
+    assert dict(eng._home)[0] == 0
+    eng.submit([BufferEntry(uid=1, prompt=[4, 5, 6])], version=0)
+    assert dict(eng._home)[1] == 1, "fresh entry must avoid the loaded replica"
+
+
+def test_round_robin_cycles_replicas():
+    eng = make_group_sim(capacity=4, n_replicas=2)
+    eng.balancer = make_balancer("round_robin")
+    # fully distinct prefill prefixes, or prefix co-location would
+    # (correctly) override the balancer and keep the group together
+    es = [BufferEntry(uid=i, prompt=[7 + i, 8, 9]) for i in range(4)]
+    eng.submit(es, version=0)
+    assert [dict(eng._home)[i] for i in range(4)] == [0, 1, 0, 1]
+
+
+def test_length_hint_override_drives_routing():
+    """A caller-supplied length hint is honoured: the replica already
+    carrying the 'long' entry is avoided even when slot counts tie."""
+    hints = {0: 1000.0, 1: 1.0, 2: 1.0}
+    eng = make_group_sim(capacity=4, n_replicas=2)
+    eng.length_hint = lambda e: hints[e.uid]
+    eng.submit([BufferEntry(uid=0, prompt=[1, 2])], version=0)   # r0: 1000
+    eng.submit([BufferEntry(uid=1, prompt=[3, 4])], version=0)   # r1: light
+    eng.submit([BufferEntry(uid=2, prompt=[5, 6])], version=0)   # r1 again
+    homes = dict(eng._home)
+    assert homes[0] == 0 and homes[1] == 1 and homes[2] == 1
+
+
+def test_empty_prefill_key_does_not_co_route():
+    """Single-token prompts all share the empty prefill prefix, which the
+    page cache never shares — they must spread by the balancer instead of
+    piling onto one replica."""
+    eng = make_group_sim(capacity=4, n_replicas=2)
+    eng.submit([BufferEntry(uid=i, prompt=[5 + i]) for i in range(4)],
+               version=0)
+    homes = [dict(eng._home)[i] for i in range(4)]
+    assert sorted(homes) == [0, 0, 1, 1], homes
+
+
+# -- token identity -----------------------------------------------------------
+
+def test_group_greedy_token_identical_to_single_engine():
+    """Pinned: greedy decode through EngineGroup(n=4) is token-identical
+    per uid to the single SlotEngine on the same prompts — sharding the
+    rollout must not change any trajectory."""
+    prompts = _prompts(8)
+    single = _greedy_slot(capacity=8)
+    base = _drain_tokens(single, [BufferEntry(uid=i, prompt=list(p))
+                                  for i, p in enumerate(prompts)])
+    group = EngineGroup([_greedy_slot(capacity=2) for _ in range(4)])
+    got = _drain_tokens(group, [BufferEntry(uid=i, prompt=list(p))
+                                for i, p in enumerate(prompts)])
+    assert got == base
+
+
+# -- metrics flow -------------------------------------------------------------
+
+def test_group_metrics_flow_through_orchestrator():
+    """RolloutOrchestrator surfaces the group gauges (steal_count,
+    replica_busy, replica_bubble_ratio) via cache_stats plumbing for
+    any replica type — including sim replicas with no page pool."""
+    eng = make_group_sim()
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    cfg = SortedRLConfig(mode=Mode.PARTIAL, rollout_batch=4, group_size=2,
+                         update_batch=4, max_gen_len=6)
+    orch = RolloutOrchestrator(eng, buf, cfg, make_policy("sorted"),
+                               lambda req: None)
+    orch.run_group(_prompts(8))
+    s = orch.metrics.summary()
+    assert s["replica_busy"] > 0.0
+    assert 0.0 <= s["replica_bubble_ratio"] <= 1.0
+    assert s["steal_count"] >= 0
+    stats = eng.replica_stats()
+    assert len(stats) == 2
+    assert all(0.0 <= r["bubble_ratio"] <= 1.0 for r in stats)
+
+
+def test_group_clock_is_modeled_concurrent():
+    """The group clock accumulates the max per-replica delta of each
+    submit/step/sync phase: monotone, at least the slowest replica's
+    total advance (phases overlap), at most the sequential sum."""
+    eng = make_group_sim()
+    base = [r.clock for r in eng.replicas]
+    t0 = eng.clock
+    eng.submit([BufferEntry(uid=i, prompt=[1, 2, 3]) for i in range(4)],
+               version=0)
+    clocks = [eng.clock]
+    while eng.active_uids():
+        eng.step()
+        clocks.append(eng.clock)
+    eng.sync_weights(1)
+    clocks.append(eng.clock)
+    assert clocks == sorted(clocks) and clocks[-1] > t0
+    advances = [r.clock - b for r, b in zip(eng.replicas, base)]
+    total = eng.clock - t0
+    assert max(advances) <= total + 1e-9
+    assert total <= sum(advances) + 1e-9
+
+
+def test_group_sync_weights_broadcasts():
+    eng = make_group_sim()
+    eng.sync_weights(5)
+    assert eng.version == 5
+    assert all(r.version == 5 for r in eng.replicas)
+
+
+# -- session wiring -----------------------------------------------------------
+
+def test_session_builds_engine_group():
+    from repro.rl.session import RLSession, SessionConfig
+    cfg = SessionConfig(task="logic", policy="sorted", engine="sim",
+                        num_replicas=4, rollout_batch=32, update_batch=32,
+                        group_size=2, n_groups=1, mode=Mode.PARTIAL,
+                        max_gen_len=64)
+    sess = RLSession.from_config(cfg)
+    assert isinstance(sess.engine, EngineGroup)
+    assert len(sess.engine.replicas) == 4
+    assert sess.engine.capacity == 32
+    assert sess.orchestrator.cfg.num_replicas == 4
+    out = sess.run()
+    assert out["rollout_metrics"]["replica_busy"] > 0.0
+
+
+def test_session_rejects_indivisible_replica_split():
+    from repro.rl.session import RLSession, SessionConfig
+    cfg = SessionConfig(task="logic", engine="sim", num_replicas=3,
+                        rollout_batch=32)
+    with pytest.raises(ValueError):
+        RLSession.from_config(cfg)
+
+
+def test_session_single_replica_stays_plain_engine():
+    from repro.rl.session import RLSession, SessionConfig
+    cfg = SessionConfig(task="logic", engine="sim", num_replicas=1,
+                        rollout_batch=8, update_batch=8, n_groups=1,
+                        max_gen_len=32)
+    sess = RLSession.from_config(cfg)
+    assert isinstance(sess.engine, SimEngine)

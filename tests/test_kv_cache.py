@@ -195,3 +195,135 @@ def test_block_table_pads_with_garbage():
     assert (bt[0, 2:] == GARBAGE_PAGE).all()
     assert (bt[1] == GARBAGE_PAGE).all()                 # inactive slot
     assert kv.max_blocks([0]) == 2
+
+
+# -- property tests: random interleavings (tests/proptest.py) -----------------
+#
+# The example-based cases above pin known-good sequences; these drive the
+# pool and the cache through randomized op interleavings and assert the
+# structural invariants the engine relies on at every step:
+#   * refcounts never go negative and always equal the table references
+#   * after every owner frees, zero pages remain in use (no leaks)
+#   * the donor index never dangles (every entry points at a live table,
+#     inverse map consistent, find_donor only returns covering donors)
+
+from proptest import booleans, cases, integers, lists, tuples  # noqa: E402
+
+
+def _donor_index_consistent(kv: PagedKVCache) -> None:
+    for key, holders in kv._donors.items():
+        assert holders, f"empty donor set left behind for {key}"
+        for uid in holders:
+            assert uid in kv.tables, f"donor {uid} dangling for {key}"
+            assert key in kv._donor_keys[uid]
+    for uid, keys in kv._donor_keys.items():
+        assert uid in kv.tables
+        for key in keys:
+            assert uid in kv._donors.get(key, set())
+        donor = kv.find_donor(next(iter(keys)))
+        if donor is not None:
+            key = next(iter(keys))
+            assert kv.tokens[donor][:len(key)] == list(key)
+
+
+@cases(max_examples=40,
+       num_pages=integers(2, 12),
+       page_size=integers(1, 4),
+       ops=lists(tuples(integers(0, 1), integers(0, 3)),
+                 min_size=1, max_size=60))
+def test_pool_random_alloc_retain_release(num_pages, page_size, ops):
+    pool = PagePool(num_pages, page_size)
+    held = []                      # one list entry per outstanding reference
+    for opcode, arg in ops:
+        if opcode == 0:
+            try:
+                held.append(pool.alloc())
+            except PoolExhausted:
+                assert pool.free_pages() == 0
+        elif held:
+            i = arg % len(held)
+            if arg % 2 == 0:
+                held.append(pool.retain(held[i]))
+            else:
+                pool.release(held.pop(i))
+        assert (pool.refcount >= 0).all()
+        assert pool.pages_in_use + pool.free_pages() == num_pages - 1
+    for page in held:
+        pool.release(page)
+    assert pool.pages_in_use == 0 and (pool.refcount == 0).all()
+
+
+@cases(max_examples=50,
+       num_pages=integers(3, 16),
+       page_size=integers(1, 4),
+       retain=booleans(),
+       ops=lists(tuples(integers(0, 6), integers(0, 5), integers(0, 9)),
+                 min_size=1, max_size=70))
+def test_cache_random_interleavings_hold_invariants(num_pages, page_size,
+                                                    retain, ops):
+    kv = PagedKVCache(num_pages, page_size, retain_across_sync=retain)
+    for opcode, uid, arg in ops:
+        if opcode == 0 and uid not in kv.tables:        # fresh prefill
+            key = tuple(uid * 101 + j for j in range(1 + arg))
+            try:
+                kv.register_prefill(uid, key)
+            except PoolExhausted:
+                pass                                    # oversubscribed
+        elif opcode == 1 and uid not in kv.tables:      # prefix share
+            keys = sorted(kv._donors)
+            if keys:
+                key = keys[arg % len(keys)]
+                donor = kv.find_donor(key)
+                if donor is not None:
+                    kv.share(uid, donor, key)
+        elif opcode == 2:                               # decode step (COW)
+            active = sorted(kv._active)
+            if active:
+                u = active[arg % len(active)]
+                try:
+                    kv.prepare_step([u], [len(kv.tokens[u])])
+                except PoolExhausted:
+                    continue
+                kv.append_tokens([u], [arg])
+        elif opcode == 3:                               # interrupt
+            active = sorted(kv._active)
+            if active:
+                kv.deactivate(active[arg % len(active)])
+        elif opcode == 4:                               # resume a prefix
+            resident = sorted(kv._resident)
+            if resident:
+                u = resident[arg % len(resident)]
+                toks = kv.tokens[u]
+                n = 1 + arg % max(1, len(toks))
+                kv.try_resume(u, tuple(toks[:n]))
+        elif opcode == 5:                               # finish
+            if uid in kv.tables:
+                kv.release_seq(uid)
+        elif opcode == 6:                               # weight sync
+            kv.sync_version(kv.version + 1)
+        kv.check_invariants()
+        assert (kv.pool.refcount >= 0).all()
+        _donor_index_consistent(kv)
+    kv.release_many(list(kv.tables))
+    assert kv.pool.pages_in_use == 0, "pages leaked after all frees"
+    assert (kv.pool.refcount == 0).all()
+    assert not kv._donors and not kv._donor_keys, "donor index leaked"
+
+
+@cases(max_examples=20,
+       num_pages=integers(3, 6),
+       plen=integers(6, 30))
+def test_failed_prefill_rolls_back_partial_allocation(num_pages, plen):
+    """A register_prefill that exhausts the pool mid-allocation must not
+    leak the pages it already grabbed."""
+    kv = PagedKVCache(num_pages, page_size=2)
+    key = tuple(range(plen))
+    if kv._pages_for_rows(plen) <= num_pages - 1:
+        kv.register_prefill(99, key)                    # fits: occupy + keep
+        kv.check_invariants()
+        return
+    with pytest.raises(PoolExhausted):
+        kv.register_prefill(99, key)
+    assert 99 not in kv.tables
+    assert kv.pool.pages_in_use == 0, "partial allocation leaked"
+    kv.check_invariants()
