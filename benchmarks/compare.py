@@ -34,13 +34,37 @@ import sys
 
 ABS_FLOOR_US = 1000.0   # ignore regressions smaller than 1 ms absolute
 
+# rows every smoke run must produce, independent of what the committed
+# baseline happens to contain — a baseline that predates a row must not
+# let CI silently drop it.  The replicas/* set carries the acceptance
+# pins of the data-parallel rollout layer (per-replica bubble vs
+# sharding, async stepping, drain-phase tail packing).
+REQUIRED_SMOKE_ROWS = (
+    "replicas/r1", "replicas/r2", "replicas/r4", "replicas/r4_rr",
+    "replicas/r4_async", "replicas/r4_pack",
+)
 
-def load_rows(path: str) -> dict:
-    with open(path) as f:
-        data = json.load(f)
+
+def rows_from(data: dict) -> dict:
     # rows without a numeric timing (e.g. roofline_table) are not gated
     return {r["name"]: float(r["us_per_call"]) for r in data["rows"]
             if r.get("us_per_call") is not None}
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        return rows_from(json.load(f))
+
+
+def check_required(new: dict, smoke: bool) -> int:
+    if not smoke:
+        return 0
+    missing = [name for name in REQUIRED_SMOKE_ROWS if name not in new]
+    if missing:
+        print("smoke-benchmark gate FAILED: required rows missing "
+              f"from the new run: {missing}", file=sys.stderr)
+        return 1
+    return 0
 
 
 def compare(new: dict, base: dict, threshold: float) -> int:
@@ -84,12 +108,18 @@ def main(argv) -> int:
                     help="fail when us_per_call exceeds this multiple of "
                          "the baseline (default 2.0)")
     args = ap.parse_args(argv)
+    with open(args.new) as f:
+        new_data = json.load(f)
+    new = rows_from(new_data)
+    required_rc = check_required(new, bool(new_data.get("smoke")))
     if not os.path.exists(args.baseline):
+        if required_rc:
+            return required_rc
         print(f"no baseline at {args.baseline} — bootstrap run, commit "
               f"{args.new} as the baseline", file=sys.stderr)
         return 0
-    return compare(load_rows(args.new), load_rows(args.baseline),
-                   args.threshold)
+    rc = compare(new, load_rows(args.baseline), args.threshold)
+    return required_rc or rc
 
 
 if __name__ == "__main__":

@@ -4,6 +4,20 @@ and the discrete-event simulator (repro.rollout.sim).
 The controller only speaks this interface, so scheduling policies are
 validated against the simulator and executed unchanged against the real
 engine — the co-design the paper's infrastructure section describes.
+
+Beyond the required surface, engines may implement an optional
+**migration capability** discovered by duck typing (used by
+``repro.rollout.group.EngineGroup`` for work stealing and drain-phase
+tail packing):
+
+  * ``export_entry(uid) -> Optional[dict]`` — snapshot an in-flight slot
+    or resident KV for transfer (pure read; ``None`` = unsupported);
+  * ``import_entry(handle) -> bool`` — land the snapshot here, False
+    (engine unchanged) when it cannot accept;
+  * ``discard_entry(uid)`` — drop the donor copy once accepted.
+
+Engines without these methods simply never migrate (the group falls back
+to release-and-re-prefill).
 """
 from __future__ import annotations
 

@@ -99,6 +99,8 @@ class CacheStats:
     evictions: int = 0                # resident sequences evicted for space
     stale_kv_reuses: int = 0          # resumes/shares of pre-sync KV (see
                                       # retain_across_sync)
+    migrated_pages: int = 0           # pages imported from another pool
+                                      # (cross-replica KV migration)
 
     def as_dict(self, pool: PagePool, resident: int) -> Dict[str, float]:
         return {
@@ -109,11 +111,31 @@ class CacheStats:
             "cow_copies": self.cow_copies,
             "evictions": self.evictions,
             "stale_kv_reuses": self.stale_kv_reuses,
+            "migrated_pages": self.migrated_pages,
             "pages_in_use": pool.pages_in_use,
             "pages_total": pool.num_pages - 1,
             "page_occupancy": pool.occupancy(),
             "resident_seqs": resident,
         }
+
+
+@dataclasses.dataclass
+class PageExport:
+    """Host-side record of one sequence's pages for cross-pool migration.
+
+    Produced by :meth:`PagedKVCache.export_pages` WITHOUT mutating the
+    donor: ``pages`` are donor-physical ids the engine must copy buffer
+    contents from before the donor releases the sequence.  Consumed by
+    :meth:`PagedKVCache.import_pages` on the destination pool, which
+    allocates a fresh span and re-registers the sequence (active or
+    resident) so a migrated entry resumes with zero re-prefill.
+    """
+    uid: int
+    tokens: List[int]
+    version: int          # policy version the KV was committed under
+    pages: List[int]      # donor-physical page ids, logical order
+    active: bool          # occupied an engine slot (vs resident-for-resume)
+    donor_keys: List[TokenKey]    # prefix keys the uid served as donor for
 
 
 class PagedKVCache:
@@ -312,6 +334,57 @@ class PagedKVCache:
         self._register_donor(uid, key)
         self.stats.prefill_tokens_run += len(key)
         return list(self.tables[uid])
+
+    # -- cross-pool migration ---------------------------------------------
+
+    def export_pages(self, uid: int) -> PageExport:
+        """Snapshot `uid`'s span for migration to another pool.
+
+        Pure read: the donor keeps its pages (and any sharers keep
+        theirs) until the caller has copied the buffer contents and
+        explicitly calls :meth:`release_seq`.  That ordering lets a
+        failed import fall back without having destroyed the donor copy.
+        """
+        assert uid in self.tables, uid
+        return PageExport(
+            uid=uid, tokens=list(self.tokens[uid]),
+            version=self._seq_version.get(uid, self.version),
+            pages=list(self.tables[uid]),
+            active=uid in self._active,
+            donor_keys=sorted(self._donor_keys.get(uid, ())))
+
+    def import_pages(self, export: PageExport) -> List[int]:
+        """Land a migrated span in THIS pool: allocate len(export.pages)
+        fresh pages (evicting residents under pressure, rolling back on
+        exhaustion) and re-register the sequence — active if it occupied
+        a slot on the donor, resident-for-resume otherwise.  Returns the
+        new physical page table for the engine's buffer copy; counts the
+        span in ``stats.migrated_pages``."""
+        uid = export.uid
+        assert uid not in self.tables, uid
+        pages: List[int] = []
+        try:
+            for _ in range(len(export.pages)):
+                pages.append(self._alloc())
+        except PoolExhausted:
+            # a failed import must not leak the partial span
+            for page in pages:
+                self.pool.release(page)
+            raise
+        self.tables[uid] = pages
+        self.tokens[uid] = list(export.tokens)
+        self._seq_version[uid] = export.version
+        if export.active:
+            self._active.add(uid)
+        else:
+            self._resident[uid] = None
+        # re-register the SOURCE pool's donor keys (typically the prefill
+        # prefix), not the full committed sequence: a migrated GRPO member
+        # must keep attracting its siblings' prompt key here
+        for key in export.donor_keys:
+            self._register_donor(uid, tuple(key))
+        self.stats.migrated_pages += len(pages)
+        return list(pages)
 
     # -- decode-time ------------------------------------------------------
 

@@ -26,6 +26,9 @@ class RolloutMetrics:
     page_occupancy_peak: float = 0.0
     # multi-replica (EngineGroup) gauges — zero for single engines
     steal_count: int = 0            # resumes migrated off their home replica
+    steal_migrations: int = 0       # steals that carried their KV along
+    migrated_pages: int = 0         # KV pages moved across replica pools
+    packed_entries: int = 0         # drain-phase tail-pack consolidations
     replica_busy: float = 0.0       # time-weighted mean busy-replica count
     replica_bubble_ratio: float = 0.0   # per-replica Eq. 4 on busy replicas
 
@@ -50,6 +53,12 @@ class RolloutMetrics:
         # running ratios (latest snapshot wins)
         self.steal_count = max(self.steal_count,
                                int(stats.get("steal_count", 0)))
+        self.steal_migrations = max(self.steal_migrations,
+                                    int(stats.get("steal_migrations", 0)))
+        self.migrated_pages = max(self.migrated_pages,
+                                  int(stats.get("migrated_pages", 0)))
+        self.packed_entries = max(self.packed_entries,
+                                  int(stats.get("packed_entries", 0)))
         if "replica_busy" in stats:
             self.replica_busy = float(stats["replica_busy"])
         if "replica_bubble_ratio" in stats:
@@ -86,6 +95,9 @@ class RolloutMetrics:
         self.page_occupancy_peak = max(self.page_occupancy_peak,
                                        other.page_occupancy_peak)
         self.steal_count += other.steal_count
+        self.steal_migrations += other.steal_migrations
+        self.migrated_pages += other.migrated_pages
+        self.packed_entries += other.packed_entries
         self.replica_busy = max(self.replica_busy, other.replica_busy)
         self.replica_bubble_ratio = max(self.replica_bubble_ratio,
                                         other.replica_bubble_ratio)
@@ -103,6 +115,9 @@ class RolloutMetrics:
             "prefill_tokens_saved": self.prefill_tokens_saved,
             "page_occupancy_peak": round(self.page_occupancy_peak, 4),
             "steal_count": self.steal_count,
+            "steal_migrations": self.steal_migrations,
+            "migrated_pages": self.migrated_pages,
+            "packed_entries": self.packed_entries,
             "replica_busy": round(self.replica_busy, 3),
             "replica_bubble_ratio": round(self.replica_bubble_ratio, 4),
         }

@@ -56,6 +56,11 @@ class SortedRLConfig:
     # consumed by session/benchmark builders — the orchestrator itself
     # only ever sees the merged EngineProtocol surface
     num_replicas: int = 1
+    # EngineGroup tail knobs (ignored when num_replicas == 1): drop the
+    # lockstep step barrier / consolidate the drain-phase tail onto the
+    # fewest replicas via cross-replica KV migration
+    async_step: bool = False
+    drain_pack: bool = False
 
     def __post_init__(self):
         if self.harvest_threshold is not None and self.harvest_threshold < 0:

@@ -158,6 +158,8 @@ class SessionConfig:
     # engine replicas behind an EngineGroup (1 = plain single engine)
     num_replicas: int = 1
     balancer: str = "least_tokens"    # EngineGroup routing (group.py registry)
+    async_step: bool = False          # per-replica dispatch, no step barrier
+    drain_pack: bool = False          # tail packing via KV migration
     mode: Mode = Mode.ON_POLICY
     rollout_batch: int = 32           # engine capacity (slots)
     group_size: int = 2
@@ -239,7 +241,9 @@ class RLSession:
                               max_gen_len=cfg.max_gen_len,
                               harvest_threshold=cfg.harvest_threshold,
                               train_leftover=cfg.train_leftover,
-                              num_replicas=cfg.num_replicas)
+                              num_replicas=cfg.num_replicas,
+                              async_step=cfg.async_step,
+                              drain_pack=cfg.drain_pack)
         evals: List[Dict] = []
         sched_history: List[Dict] = []
 
@@ -254,7 +258,9 @@ class RLSession:
             if n == 1:
                 return build_one(0, cfg.rollout_batch)
             return EngineGroup([build_one(i, cfg.rollout_batch // n)
-                                for i in range(n)], balancer=cfg.balancer)
+                                for i in range(n)], balancer=cfg.balancer,
+                               async_step=cfg.async_step,
+                               drain_pack=cfg.drain_pack or None)
 
         if cfg.engine == "slot":
             model = build_model(tiny_lm_config(len(vocab), cfg.d_model,
@@ -309,9 +315,15 @@ class RLSession:
         elif cfg.engine == "sim":
             # scheduling-only: discrete-event engine, batch-stats trainer
             gen = spec.make_generator(cfg.seed)
+            # mirror the slot path's sync semantics: modeled residency
+            # survives weight syncs only in partial mode (explicit
+            # sim_kwargs still win)
+            sim_kwargs = dict(cfg.sim_kwargs)
+            sim_kwargs.setdefault("kv_retain_across_sync",
+                                  Mode(cfg.mode) == Mode.PARTIAL)
             engine = replicated(lambda i, cap: SimEngine(
                 capacity=cap, max_gen_len=cfg.max_gen_len, seed=cfg.seed + i,
-                **cfg.sim_kwargs))
+                **sim_kwargs))
 
             def train_fn(req: UpdateRequest) -> UpdateResult:
                 lens = [e.gen_len for e in req.entries]

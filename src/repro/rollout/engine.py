@@ -66,7 +66,7 @@ import numpy as np
 
 from repro.core.buffer import BufferEntry
 from repro.core.engine_api import SlotTable, StepEvent
-from repro.core.kv_cache import PagedKVCache
+from repro.core.kv_cache import PagedKVCache, PoolExhausted
 from repro.models.model import Model
 
 # per-family cache batch-axis maps (see Model cache layouts)
@@ -464,3 +464,83 @@ class SlotEngine:
         if self.paged:
             self.kv.deactivate_many(out)   # keep pages resident for resume
         return out
+
+    # -- migration capability (EngineGroup work stealing / tail packing) ------
+    #
+    # A migrated entry carries its resident KV across page pools (span
+    # copy on device via the page tables), so a stolen or drain-packed
+    # sequence resumes on the destination replica with ZERO re-prefill.
+    # The three-call shape (export -> import -> discard) keeps the donor
+    # copy intact until the importer has accepted, so a failed import
+    # (full pool, no free slot) falls back without losing anything.
+
+    def export_entry(self, uid: int) -> Optional[Dict]:
+        """Snapshot an in-flight slot or a resident uid — page table
+        bookkeeping from :meth:`PagedKVCache.export_pages` plus the
+        physical KV rows pulled off the donor pool.  None when the engine
+        cannot migrate (dense layout, or no trace of the uid)."""
+        if not self.paged or uid not in self.kv.tables:
+            return None
+        ex = self.kv.export_pages(uid)
+        handle = {
+            "engine": "slot", "uid": uid, "active": ex.active, "kv": ex,
+            # span copy: the donor's physical rows for ex.pages (host
+            # round-trip; a multi-host deployment would DMA these)
+            "pages_k": np.asarray(self.cache["k"][:, ex.pages]),
+            "pages_v": np.asarray(self.cache["v"][:, ex.pages]),
+        }
+        if ex.active:
+            sel = np.flatnonzero((self.slots.uid == uid) & self.slots.active)
+            assert sel.size == 1, (uid, sel)
+            i = int(sel[0])
+            t = self.slots
+            handle["slot"] = {"next_token": int(t.next_token[i]),
+                              "kv_len": int(t.kv_len[i]),
+                              "kv_start": int(t.kv_start[i]),
+                              "gen_count": int(t.gen_count[i]),
+                              "gen_budget": int(t.gen_budget[i])}
+        return handle
+
+    def import_entry(self, handle: Dict) -> bool:
+        """Land a migrated entry with its KV: fresh pages from this pool
+        (``import_pages``), donor rows copied in, and — for an active
+        entry — a slot transplanted verbatim so greedy decode continues
+        token-identically.  Returns False (engine unchanged) when it
+        cannot accept: dense layout, stale KV under strict sync, no free
+        slot, or an exhausted pool."""
+        if handle.get("engine") != "slot" or not self.paged:
+            return False
+        ex = handle["kv"]
+        if not self.kv.retain_across_sync and ex.version != self.kv.version:
+            return False    # strict sync: pre-sync KV must not cross pools
+        if ex.active and self.free_slots() <= 0:
+            return False
+        try:
+            pages = self.kv.import_pages(ex)
+        except PoolExhausted:
+            return False
+        cache = dict(self.cache)
+        for name, rows in (("k", handle["pages_k"]), ("v", handle["pages_v"])):
+            cache[name] = cache[name].at[:, pages].set(
+                jnp.asarray(rows, cache[name].dtype))
+        self.cache = cache
+        if ex.active:
+            s = handle["slot"]
+            slot = self.slots.allocate(1)
+            t = self.slots
+            t.uid[slot] = ex.uid
+            t.active[slot] = True
+            t.next_token[slot] = s["next_token"]
+            t.kv_len[slot] = s["kv_len"]
+            t.kv_start[slot] = s["kv_start"]
+            t.gen_count[slot] = s["gen_count"]
+            t.gen_budget[slot] = s["gen_budget"]
+        return True
+
+    def discard_entry(self, uid: int) -> None:
+        """Drop every local trace of a migrated-away uid (slot + pages)."""
+        sel = self.slots.select([uid])
+        if sel.size:
+            self.slots.release(sel)
+        if self.paged:
+            self.kv.release_seq(uid)

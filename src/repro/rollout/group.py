@@ -46,6 +46,37 @@ order, so the merged order is deterministic and stable for as long as a
 request stays resident — the EngineProtocol event-order contract holds
 for the group verbatim.
 
+With ``async_step=True`` the lockstep barrier is dropped: each busy
+replica is dispatched on its own clock, and a replica whose decode step
+is cheaper than the straggler's fits additional *micro-steps* into the
+straggler's one-step window (bounded by ``ASYNC_MAX_MICROSTEPS``)
+instead of idling behind it.  The event merger still emits replica-major
+(replica order, execution order within a replica), so each uid's token
+stream is untouched — one ``step()`` call may just carry more than one
+event per uid.
+
+Migration (zero re-prefill)
+---------------------------
+With ``migrate_kv=True`` the group moves an entry's *resident KV* across
+replica pools instead of abandoning it: ``export_entry`` on the donor,
+``import_pages`` + buffer copy on the destination (free in the
+simulator), counted in ``migrated_pages``.  Work stealing then lands the
+stolen entry with its pages already warm — the destination's submit path
+resumes it with ZERO re-prefill — and falls back to the old
+release-and-re-prefill behaviour only when the destination cannot accept
+(dense layout, exhausted pool, strict-sync stale KV).
+
+Drain-phase tail packing
+------------------------
+``drain_pack=True`` (or ``balancer="drain_pack"``) attacks the tail the
+way RollPacker's tail-rank rebalancing does: when pending work no longer
+fills the group (free slots survive the orchestrator's fill), in-flight
+entries are consolidated onto the fewest replicas that hold them — via
+the same migration path, so packed entries keep decoding mid-flight with
+zero re-prefill — and the drained replicas go fully idle, dropping out of
+``replica_busy`` / ``replica_bubble_ratio`` (released, in the Seer fleet
+view).  Packed moves are counted in ``packed_entries``.
+
 Accounting
 ----------
 The group keeps per-replica busy integrals on *replica-local* clocks:
@@ -143,6 +174,17 @@ def round_robin_balancer() -> Balancer:
     return pick
 
 
+@register_balancer("drain_pack")
+def drain_pack_balancer() -> Balancer:
+    """Length-aware routing + drain-phase tail packing: routes exactly
+    like ``least_tokens`` but flags the group to consolidate the in-
+    flight tail onto the fewest replicas (via KV migration) once pending
+    work no longer fills the group."""
+    pick = least_tokens_balancer()
+    pick.drain_pack = True
+    return pick
+
+
 # -----------------------------------------------------------------------------
 # the group
 # -----------------------------------------------------------------------------
@@ -151,19 +193,44 @@ def round_robin_balancer() -> Balancer:
 # scavenged and trained (never resubmitted) must not grow _home forever
 HOME_RETENTION_FACTOR = 4
 
+# async stepping: cap on decode micro-steps one replica may run inside a
+# single group step.  The catch-up loop projects the next micro-step from
+# the last observed dt; real-engine wall clocks jitter, so an explicit
+# bound keeps one noisy estimate from turning into a runaway inner loop.
+ASYNC_MAX_MICROSTEPS = 4
+
 
 class EngineGroup:
-    """N engine replicas behind the single-engine EngineProtocol surface."""
+    """N engine replicas behind the single-engine EngineProtocol surface.
+
+    ``async_step`` drops the lockstep step barrier (micro-step catch-up
+    on replica-local clocks), ``migrate_kv`` moves resident KV across
+    replica pools so stolen entries resume with zero re-prefill, and
+    ``drain_pack`` consolidates the in-flight tail onto the fewest
+    replicas once pending work stops filling the group (implies
+    ``migrate_kv``; also enabled by ``balancer="drain_pack"``).  All
+    three default off, preserving PR-4 lockstep semantics exactly.
+    """
 
     def __init__(self, replicas: Sequence[EngineProtocol],
                  balancer: "str | Balancer" = "least_tokens",
-                 length_hint: Optional[Callable[[BufferEntry], float]] = None):
+                 length_hint: Optional[Callable[[BufferEntry], float]] = None,
+                 async_step: bool = False,
+                 drain_pack: Optional[bool] = None,
+                 migrate_kv: Optional[bool] = None):
         assert replicas, "EngineGroup needs at least one replica"
         self.replicas = list(replicas)
         self.capacity = sum(r.capacity for r in self.replicas)
         self.balancer = (make_balancer(balancer)
                          if isinstance(balancer, str) else balancer)
         self.length_hint = length_hint
+        self.async_step = async_step
+        if drain_pack is None:
+            drain_pack = bool(getattr(self.balancer, "drain_pack", False))
+        self.drain_pack = drain_pack
+        # packing moves in-flight entries, which only makes sense with
+        # their KV; stealing can opt in independently
+        self.migrate_kv = drain_pack if migrate_kv is None else migrate_kv
         self.version = 0
         n = len(self.replicas)
         # group wall clock: replicas run concurrently, so each submit /
@@ -179,6 +246,9 @@ class EngineGroup:
         self._gen_total: Dict[int, int] = {}   # uid -> generated incl prefix
         self.load: List[float] = [0.0] * n     # sum of _est per replica
         self.steal_count = 0
+        self.steal_migrations = 0              # steals that moved their KV
+        self.packed_entries = 0                # drain-pack consolidations
+        self._submitted_since_step = False     # drain detection (see step)
         self._ewma_len: Optional[float] = None  # observed completion length
         self._max_gen = max((getattr(r, "max_gen_len", 0)
                              for r in self.replicas), default=0) or 1024
@@ -235,6 +305,19 @@ class EngineGroup:
         seq = list(entry.prompt) + list(entry.generated)
         return tuple(seq[:-1])
 
+    def _drop_donor_residency(self, replica: int, uid: int) -> None:
+        """Abandoned resident state is dead weight on the donor replica —
+        release it explicitly (paged pool pages, or the simulator's
+        modeled residency) instead of letting it crowd the pool until LRU
+        pressure reaches it."""
+        r = self.replicas[replica]
+        kv = getattr(r, "kv", None)
+        if kv is not None:
+            kv.release_seq(uid)
+        drop = getattr(r, "drop_resident", None)
+        if drop is not None:
+            drop(uid)
+
     def _remember_home(self, uid: int, replica: int) -> None:
         """Record the uid's home (insertion order doubles as recency) and
         bound the map: consumed-without-resume uids would otherwise leak
@@ -250,13 +333,24 @@ class EngineGroup:
                 break
             if u in live:
                 continue
-            # forgetting a home abandons any KV still resident there —
-            # drop it (same reasoning as the steal path) instead of
-            # letting dead pages crowd the pool until LRU reaches them
-            kv = getattr(self.replicas[self._home[u]], "kv", None)
-            if kv is not None:
-                kv.release_seq(u)
+            # forgetting a home abandons any KV still resident there
+            self._drop_donor_residency(self._home[u], u)
             del self._home[u]
+
+    def _migrate(self, uid: int, src: int, dst: int) -> bool:
+        """Move `uid` (in-flight slot or resident KV) from replica `src`
+        to `dst` through the engines' optional migration capability.
+        Export -> import -> discard: the donor copy survives until the
+        importer has accepted, so False always means 'nothing changed'."""
+        export = getattr(self.replicas[src], "export_entry", None)
+        accept = getattr(self.replicas[dst], "import_entry", None)
+        if export is None or accept is None:
+            return False
+        handle = export(uid)
+        if handle is None or not accept(handle):
+            return False
+        self.replicas[src].discard_entry(uid)
+        return True
 
     def _resident_replica(self, key: Tuple[int, ...]) -> Optional[int]:
         """Replica already holding a donor for this prefill prefix."""
@@ -266,19 +360,9 @@ class EngineGroup:
                 return i
         return None
 
-    def _route(self, entry: BufferEntry, free: List[int],
-               key_dest: Dict[Tuple[int, ...], int]) -> int:
-        home = self._home.get(entry.uid)
-        if home is not None:
-            if free[home] > 0:
-                return home
-            self.steal_count += 1          # migrate: home replica is full
-            # the thief re-prefills, so any KV left resident on the old
-            # home is dead weight — drop it instead of letting it crowd
-            # the pool until LRU pressure gets to it
-            kv = getattr(self.replicas[home], "kv", None)
-            if kv is not None:
-                kv.release_seq(entry.uid)
+    def _pick_fresh(self, entry: BufferEntry, free: List[int],
+                    key_dest: Dict[Tuple[int, ...], int]) -> int:
+        """Prefix co-routing, then the balancer (no home affinity)."""
         key = self._prefill_key(entry)
         if key:      # an empty prefix is never shared — don't co-route on it
             dest = key_dest.get(key)
@@ -287,6 +371,26 @@ class EngineGroup:
             if dest is not None and free[dest] > 0:
                 return dest
         return self.balancer(self, entry, free)
+
+    def _route(self, entry: BufferEntry, free: List[int],
+               key_dest: Dict[Tuple[int, ...], int]) -> int:
+        home = self._home.get(entry.uid)
+        if home is None:
+            return self._pick_fresh(entry, free, key_dest)
+        if free[home] > 0:
+            return home
+        self.steal_count += 1              # migrate: home replica is full
+        dest = self._pick_fresh(entry, free, key_dest)
+        if self.migrate_kv and self._migrate(entry.uid, home, dest):
+            # the entry lands on the thief with its KV resident: the
+            # destination's submit path resumes it with zero re-prefill
+            self.steal_migrations += 1
+        else:
+            # fallback: the thief re-prefills, so any KV left resident on
+            # the old home is dead weight — drop it instead of letting it
+            # crowd the pool until LRU pressure gets to it
+            self._drop_donor_residency(home, entry.uid)
+        return dest
 
     # -- protocol: submit / step / interrupt / sync -----------------------
 
@@ -326,33 +430,125 @@ class EngineGroup:
                 self.replicas[i].submit(batch, version)
                 dt_group = max(dt_group, self.replicas[i].clock - t0)
         self._clock += dt_group        # per-replica prefills run concurrently
+        self._submitted_since_step = True
+
+    def _micro_step(self, i: int) -> Tuple[List[StepEvent], float]:
+        """One decode step on replica `i` with full event accounting."""
+        r = self.replicas[i]
+        t0 = r.clock
+        evs = r.step()
+        dt = r.clock - t0
+        self._busy_time[i] += len(evs) * dt
+        self._cap_time[i] += r.capacity * dt
+        for ev in evs:
+            if self._est.get(ev.uid, 0.0) >= 1.0:
+                self._est[ev.uid] -= 1.0
+                self.load[i] -= 1.0
+            self._gen_total[ev.uid] = self._gen_total.get(ev.uid, 0) + 1
+            if ev.done:
+                self._finish(ev.uid, i)
+        return evs, dt
 
     def step(self) -> List[StepEvent]:
-        events: List[StepEvent] = []
-        dt_group = 0.0
-        busy_replicas = 0
-        for i, r in enumerate(self.replicas):
-            if not r.active_uids():
-                continue
-            t0 = r.clock
-            evs = r.step()
-            dt = r.clock - t0
-            busy_replicas += 1
-            dt_group = max(dt_group, dt)
-            self._busy_time[i] += len(evs) * dt
-            self._cap_time[i] += r.capacity * dt
-            for ev in evs:
-                if self._est.get(ev.uid, 0.0) >= 1.0:
-                    self._est[ev.uid] -= 1.0
-                    self.load[i] -= 1.0
-                self._gen_total[ev.uid] = self._gen_total.get(ev.uid, 0) + 1
-                if ev.done:
-                    self._finish(ev.uid, i)
-            events.extend(evs)
-        self._busy_replicas_time += busy_replicas * dt_group
+        # pack only when no work arrived since the previous step: the
+        # orchestrator fills before every step, so a quiet interval with
+        # free slots means pending is genuinely dry (drain), while a
+        # policy that is still admitting (group-barrier gating, lookahead)
+        # keeps the flag set and avoids pack/redistribute churn
+        if self.drain_pack and not self._submitted_since_step:
+            self._maybe_pack()
+        self._submitted_since_step = False
+        busy = [i for i, r in enumerate(self.replicas) if r.active_uids()]
+        if not busy:
+            return []
+        streams: List[List[StepEvent]] = []
+        spent: List[float] = []                 # per-replica in-call time
+        last_dt: List[float] = []
+        for i in busy:
+            evs, dt = self._micro_step(i)
+            streams.append(evs)
+            spent.append(dt)
+            last_dt.append(dt)
+        if self.async_step:
+            # no step barrier: while the straggler's single step runs, a
+            # replica with a cheaper step fits extra micro-steps into the
+            # same window (projected from its last observed dt)
+            horizon = max(spent)
+            for _ in range(ASYNC_MAX_MICROSTEPS - 1):
+                progressed = False
+                for k, i in enumerate(busy):
+                    if not self.replicas[i].active_uids():
+                        continue
+                    if last_dt[k] <= 0 or spent[k] + last_dt[k] > horizon:
+                        continue
+                    evs, dt = self._micro_step(i)
+                    streams[k].extend(evs)
+                    spent[k] += dt
+                    last_dt[k] = dt
+                    progressed = True
+                if not progressed:
+                    break
+        # replica-major merge: replica order, execution order within one
+        events = [ev for stream in streams for ev in stream]
+        dt_group = max(spent)           # replicas overlap in time
+        self._busy_replicas_time += len(busy) * dt_group
         self._stepped_time += dt_group
-        self._clock += dt_group        # lockstep step: replicas overlap
+        self._clock += dt_group
         return events
+
+    def _maybe_pack(self) -> None:
+        """Drain-phase tail packing: once pending work no longer fills the
+        group (free slots survived the orchestrator's fill), consolidate
+        the in-flight tail onto the fewest replicas that can hold it and
+        let the drained replicas go idle (released from the busy set)."""
+        active = [len(r.active_uids()) for r in self.replicas]
+        total = sum(active)
+        if total == 0 or total >= self.capacity:
+            return                      # empty, or pending still fills us
+        busy = [i for i, a in enumerate(active) if a > 0]
+        # fewest replicas (most-loaded first: they move the least) that
+        # can hold every in-flight entry
+        order = sorted(busy, key=lambda i: (-active[i], i))
+        keep: List[int] = []
+        cap = 0
+        for i in order:
+            keep.append(i)
+            cap += self.replicas[i].capacity
+            if cap >= total:
+                break
+        if len(keep) >= len(busy):
+            return                      # already as consolidated as it gets
+        keep_set = set(keep)
+        room = {i: self.replicas[i].capacity - active[i] for i in keep}
+        donors = sorted((i for i in busy if i not in keep_set),
+                        key=lambda i: (active[i], i))
+        for d in donors:
+            export = getattr(self.replicas[d], "export_entry", None)
+            if export is None:
+                return                  # backend cannot migrate — leave it
+            for uid in list(self.replicas[d].active_uids()):
+                handle = export(uid)
+                if handle is None:
+                    return              # backend cannot migrate — leave it
+                # one export, every willing destination: a destination-
+                # local failure (exhausted page pool) must not strand the
+                # tail when another keep replica still has room
+                dst = None
+                for i in (i for i in keep if room[i] > 0):
+                    accept = getattr(self.replicas[i], "import_entry", None)
+                    if accept is not None and accept(handle):
+                        dst = i
+                        break
+                if dst is None:
+                    return              # nobody can take it now — retry on
+                                        # a later step once pressure eases
+                self.replicas[d].discard_entry(uid)
+                room[dst] -= 1
+                est = self._est.get(uid, 0.0)
+                self.load[d] = max(0.0, self.load[d] - est)
+                self.load[dst] += est
+                self._remember_home(uid, dst)
+                self.packed_entries += 1
 
     def _finish(self, uid: int, replica: int) -> None:
         total = self._gen_total.pop(uid, 0)
@@ -438,6 +634,8 @@ class EngineGroup:
         out: Dict[str, float] = {
             "num_replicas": float(len(self.replicas)),
             "steal_count": float(self.steal_count),
+            "steal_migrations": float(self.steal_migrations),
+            "packed_entries": float(self.packed_entries),
             "replica_busy": self.replica_busy,
             "replica_bubble_ratio": self.replica_bubble_ratio,
         }
@@ -451,7 +649,8 @@ class EngineGroup:
             for key in ("prefill_tokens_run", "prefill_tokens_saved",
                         "shared_prefills", "resumed_without_prefill",
                         "cow_copies", "evictions", "stale_kv_reuses",
-                        "pages_in_use", "pages_total", "resident_seqs"):
+                        "migrated_pages", "pages_in_use", "pages_total",
+                        "resident_seqs"):
                 out[key] = float(sum(s.get(key, 0) for s in subs))
             # saturation gauge: the WORST per-replica occupancy.  Pooling
             # (sum in_use / sum total) would read ~0.4 while one skewed

@@ -22,6 +22,23 @@ uses — ``gen_count`` is the tokens generated this occupancy, ``kv_start``
 the scavenged prefix carried in, and ``gen_budget`` the (capped) hidden
 length target — so ``step()`` shares the engine's vectorized retirement
 path and its ascending-slot event order.
+
+Residency & migration
+---------------------
+With ``kv_residency=True`` the simulator mirrors the paged engine's
+resume semantics: interrupted uids stay "resident" and a later resubmit
+charges ZERO prefill time (counted in ``resumed_without_prefill`` /
+``prefill_tokens_saved``, surfaced via :meth:`cache_stats`).  The default
+is off, preserving the pre-residency cost model (every resume re-charges
+its prefix) for existing benchmarks.  ``kv_retain_across_sync`` matches
+the paged cache's knob: with ``False`` (the on-policy setting) a weight
+sync drops every modeled residency, so re-rolls charge a fresh prefill
+exactly as :class:`~repro.core.kv_cache.PagedKVCache` would re-run it.  The engine also implements the
+optional migration capability (:meth:`export_entry` /
+:meth:`import_entry` / :meth:`discard_entry`) the
+:class:`~repro.rollout.group.EngineGroup` uses for work stealing and
+drain-phase tail packing — migration is FREE here (no pages to copy),
+matching the "span copy between pools" the slot engine pays for.
 """
 from __future__ import annotations
 
@@ -62,11 +79,17 @@ class SimCostModel:
 class SimEngine:
     """EngineProtocol implementation over a virtual clock."""
 
+    # resident uids kept per slot of capacity (mirrors EngineGroup's
+    # home-map bound): consumed-without-resume uids must not grow forever
+    RESIDENT_RETENTION_FACTOR = 4
+
     def __init__(self, capacity: int, max_gen_len: int = 8192,
                  cost: Optional[SimCostModel] = None,
                  length_sampler: Optional[Callable] = None,
                  resample_on_reroll: bool = False, seed: int = 0,
-                 length_table: Optional[Dict[int, int]] = None):
+                 length_table: Optional[Dict[int, int]] = None,
+                 kv_residency: bool = False,
+                 kv_retain_across_sync: bool = True):
         self.capacity = capacity
         self.max_gen_len = max_gen_len
         self.cost = cost or SimCostModel()
@@ -80,13 +103,20 @@ class SimEngine:
         # prompt, not of the replica that happens to serve it), which is
         # what balancer comparisons need.
         self.length_table = length_table
+        self.kv_residency = kv_residency
+        self.kv_retain_across_sync = kv_retain_across_sync
         self.rng = random.Random(seed)
         self._clock = 0.0
         self.slots = SlotTable(capacity)
         # finish reason per slot: True when the hidden target fits the budget
         self._eos = np.zeros(capacity, bool)
         self._target_by_uid: Dict[int, int] = {}
+        self._resident: Dict[int, None] = {}       # insertion-ordered LRU
         self.version = 0
+        # paged-engine-shaped counters (cache_stats surface)
+        self.prefill_tokens_run = 0
+        self.prefill_tokens_saved = 0
+        self.resumed_without_prefill = 0
 
     @property
     def clock(self) -> float:
@@ -102,6 +132,10 @@ class SimEngine:
         if version != self.version:
             self._clock += self.cost.t_sync
             self.version = version
+            if not self.kv_retain_across_sync:
+                # strict sync (on-policy re-rolls): pre-sync KV must not
+                # serve a free resume — same rule as PagedKVCache
+                self._resident.clear()
 
     def _target(self, e: BufferEntry) -> int:
         if self.length_table is not None and e.uid in self.length_table:
@@ -123,7 +157,18 @@ class SimEngine:
         t.kv_start[slots] = prefix
         t.gen_budget[slots] = np.minimum(targets, self.max_gen_len)
         self._eos[slots] = targets <= self.max_gen_len
-        self._clock += self.cost.t_prefill_token * float((plens + prefix).sum())
+        charged = 0
+        for e, rows in zip(entries, (plens + prefix).tolist()):
+            if e.uid in self._resident:
+                # resident resume: the modeled KV is still warm (paged-
+                # engine semantics) — zero prefill charge
+                del self._resident[e.uid]
+                self.prefill_tokens_saved += rows
+                self.resumed_without_prefill += 1
+            else:
+                charged += rows
+        self.prefill_tokens_run += charged
+        self._clock += self.cost.t_prefill_token * float(charged)
 
     def step(self) -> List[StepEvent]:
         t = self.slots
@@ -146,4 +191,83 @@ class SimEngine:
         sel = self.slots.select(uids)
         out = [int(u) for u in self.slots.uid[sel]]
         self.slots.release(sel)
+        if self.kv_residency:
+            for uid in out:
+                self._resident.pop(uid, None)
+                self._resident[uid] = None       # re-insert: LRU recency
+            cap = self.RESIDENT_RETENTION_FACTOR * self.capacity
+            while len(self._resident) > cap:
+                # oldest residency first (consumed-without-resume uids)
+                del self._resident[next(iter(self._resident))]
         return out
+
+    # -- residency / cache surface (paged-engine-shaped) ------------------
+
+    def drop_resident(self, uid: int) -> None:
+        """Forget a uid's modeled residency (its warm KV is abandoned)."""
+        self._resident.pop(uid, None)
+
+    def cache_stats(self) -> Dict[str, float]:
+        """Prefill counters in the paged engine's cache_stats shape, so
+        sim-replica groups and benchmarks can pin zero-re-prefill resumes
+        without a real page pool behind them."""
+        return {
+            "prefill_tokens_run": float(self.prefill_tokens_run),
+            "prefill_tokens_saved": float(self.prefill_tokens_saved),
+            "resumed_without_prefill": float(self.resumed_without_prefill),
+        }
+
+    # -- migration capability (EngineGroup work stealing / tail packing) --
+
+    def export_entry(self, uid: int) -> Optional[Dict]:
+        """Snapshot an in-flight slot (or a resident uid) for migration to
+        a peer replica.  Pure read — pair with :meth:`discard_entry` once
+        the importer has accepted the handle."""
+        sel = np.flatnonzero((self.slots.uid == uid) & self.slots.active)
+        if sel.size:
+            i = int(sel[0])
+            t = self.slots
+            return {"engine": "sim", "uid": uid, "active": True,
+                    "slot": {"gen_count": int(t.gen_count[i]),
+                             "kv_start": int(t.kv_start[i]),
+                             "gen_budget": int(t.gen_budget[i]),
+                             "eos": bool(self._eos[i])},
+                    "target": self._target_by_uid.get(uid)}
+        if uid in self._resident:
+            return {"engine": "sim", "uid": uid, "active": False,
+                    "target": self._target_by_uid.get(uid)}
+        return None
+
+    def import_entry(self, handle: Dict) -> bool:
+        """Land a migrated entry: an active slot is transplanted verbatim
+        (the decode continues exactly where the donor stopped), a resident
+        uid becomes resident here.  Free — the simulator has no pages to
+        copy.  Returns False (engine unchanged) when it cannot accept."""
+        if handle.get("engine") != "sim":
+            return False
+        if handle["active"]:
+            if self.free_slots() <= 0:
+                return False
+            s = handle["slot"]
+            slot = self.slots.allocate(1)
+            t = self.slots
+            t.uid[slot] = handle["uid"]
+            t.active[slot] = True
+            t.gen_count[slot] = s["gen_count"]
+            t.kv_start[slot] = s["kv_start"]
+            t.gen_budget[slot] = s["gen_budget"]
+            self._eos[slot] = s["eos"]
+        else:
+            if not self.kv_residency:
+                return False
+            self._resident[handle["uid"]] = None
+        if handle.get("target") is not None:
+            self._target_by_uid[handle["uid"]] = handle["target"]
+        return True
+
+    def discard_entry(self, uid: int) -> None:
+        """Drop every local trace of a migrated-away uid."""
+        sel = self.slots.select([uid])
+        if sel.size:
+            self.slots.release(sel)
+        self._resident.pop(uid, None)

@@ -121,9 +121,22 @@ def make_group_slot(capacity=CAPACITY, max_gen=MAX_GEN, eos_id=-1,
                         for _ in range(n_replicas)])
 
 
+def make_group_mig(capacity=CAPACITY, max_gen=MAX_GEN, eos_id=-1,
+                   n_replicas=2, **kw):
+    """EngineGroup with cross-replica KV migration enabled: stolen
+    entries carry their resident pages to the thief's pool instead of
+    re-prefilling.  The whole single-engine contract must still hold."""
+    from repro.rollout.group import EngineGroup
+    assert capacity % n_replicas == 0
+    return EngineGroup([make_slot(capacity=capacity // n_replicas,
+                                  max_gen=max_gen, eos_id=eos_id, **kw)
+                        for _ in range(n_replicas)], migrate_kv=True)
+
+
 ENGINES = [("sim", make_sim), ("slot", make_slot),
            ("slot_dense", make_slot_dense), ("slot_left", make_slot_left),
-           ("group_sim", make_group_sim), ("group_slot", make_group_slot)]
+           ("group_sim", make_group_sim), ("group_slot", make_group_slot),
+           ("group_mig", make_group_mig)]
 
 
 @pytest.fixture(params=[name for name, _ in ENGINES])

@@ -71,12 +71,34 @@ def make_group_slot_varied():
     return make_group_slot(eos_id=logic.VOCAB.eos_id)
 
 
+def make_group_sim_tail(n_replicas, **group_kw):
+    """Replica sweep with the PR-5 tail machinery on: async stepping,
+    drain-phase packing, migration, and simulated KV residency.  Every
+    policy must hold the whole contract with entries migrating between
+    replicas mid-flight."""
+    from repro.rollout.group import EngineGroup
+
+    def factory():
+        return EngineGroup([
+            SimEngine(capacity=CAPACITY // n_replicas, max_gen_len=MAX_GEN,
+                      seed=i, kv_residency=True,
+                      length_sampler=lognormal_lengths(median=3, sigma=0.8,
+                                                       max_len=MAX_GEN))
+            for i in range(n_replicas)], **group_kw)
+    return factory
+
+
 ENGINE_FACTORIES = {"sim": make_sim_varied, "slot": make_slot_varied,
                     # num_replicas sweep {1, 2, 4} (total capacity fixed)
                     "group1_sim": make_group_sim_varied(1),
                     "group2_sim": make_group_sim_varied(2),
                     "group4_sim": make_group_sim_varied(4),
-                    "group2_slot": make_group_slot_varied}
+                    "group2_slot": make_group_slot_varied,
+                    # PR-5 tail machinery (async + drain_pack + migration)
+                    "group4_sim_async": make_group_sim_tail(
+                        4, async_step=True, migrate_kv=True),
+                    "group2_sim_pack": make_group_sim_tail(
+                        2, balancer="drain_pack", async_step=True)}
 
 
 def prompts(n, start=0):

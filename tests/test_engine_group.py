@@ -1,10 +1,12 @@
 """EngineGroup unit + regression tests beyond the shared conformance
 suite: balancer registry behaviour, greedy token-identity vs the single
-engine, replica metrics flowing through the orchestrator, and the
-session-level num_replicas wiring."""
+engine (lockstep AND async+migration), replica metrics flowing through
+the orchestrator, async stepping, cross-replica KV migration (steal +
+drain-phase tail packing), the least_tokens EWMA length estimator, and
+the session-level num_replicas wiring."""
 import pytest
 
-from engine_conformance import _tiny_model, make_group_sim
+from engine_conformance import _tiny_model, make_group_sim, make_slot
 from repro.core.buffer import BufferEntry, Mode, StatefulRolloutBuffer
 from repro.core.orchestrator import RolloutOrchestrator, SortedRLConfig
 from repro.core.policy import make_policy
@@ -106,6 +108,351 @@ def test_group_greedy_token_identical_to_single_engine():
     got = _drain_tokens(group, [BufferEntry(uid=i, prompt=list(p))
                                 for i, p in enumerate(prompts)])
     assert got == base
+
+
+# -- async stepping -----------------------------------------------------------
+
+def _hetero_async_group():
+    """Sim replicas with a 4x step-cost spread: the fast replica must fit
+    several micro-steps into the straggler's one-step window."""
+    from repro.rollout.sim import SimCostModel
+    lengths = {i: 12 for i in range(8)}
+    return EngineGroup(
+        [SimEngine(capacity=2, max_gen_len=64, seed=i, length_table=lengths,
+                   cost=SimCostModel(t_fixed=5e-3 if i == 0 else 20e-3))
+         for i in range(2)],
+        async_step=True)
+
+
+def test_async_step_catches_up_fast_replicas():
+    eng = _hetero_async_group()
+    eng.submit([BufferEntry(uid=i, prompt=[1, 2 + i]) for i in range(4)],
+               version=0)
+    evs = eng.step()
+    by_uid = {}
+    for ev in evs:
+        by_uid[ev.uid] = by_uid.get(ev.uid, 0) + 1
+    fast = [u for u in by_uid if dict(eng._home)[u] == 0]
+    slow = [u for u in by_uid if dict(eng._home)[u] == 1]
+    assert all(by_uid[u] == 1 for u in slow), "straggler stepped once"
+    assert all(by_uid[u] > 1 for u in fast), \
+        "fast replica should micro-step inside the straggler's window"
+
+
+def test_async_step_merge_is_replica_major_and_conserves():
+    """Async events stay grouped by replica (replica order), each uid's
+    token stream is a single contiguous-order substream, and every uid
+    finishes exactly once."""
+    eng = _hetero_async_group()
+    eng.submit([BufferEntry(uid=i, prompt=[1, 2 + i]) for i in range(4)],
+               version=0)
+    done = {}
+    steps = 0
+    while eng.active_uids():
+        homes = dict(eng._home)
+        evs = eng.step()
+        replicas_seen = [homes[ev.uid] for ev in evs]
+        assert replicas_seen == sorted(replicas_seen), \
+            "merged stream must be replica-major"
+        for ev in evs:
+            if ev.done:
+                done[ev.uid] = done.get(ev.uid, 0) + 1
+        steps += 1
+        assert steps < 1000
+    assert done == {i: 1 for i in range(4)}
+    assert eng.free_slots() == eng.capacity
+
+
+def test_async_clock_advances_by_straggler_window():
+    """The group clock charges the max per-replica in-call time, not the
+    sum — async replicas overlap."""
+    eng = _hetero_async_group()
+    eng.submit([BufferEntry(uid=i, prompt=[1, 2 + i]) for i in range(4)],
+               version=0)
+    r_clocks = [r.clock for r in eng.replicas]
+    t0 = eng.clock
+    eng.step()
+    dt = eng.clock - t0
+    deltas = [r.clock - c for r, c in zip(eng.replicas, r_clocks)]
+    assert abs(dt - max(deltas)) < 1e-12
+    assert dt < sum(deltas)
+
+
+# -- cross-replica KV migration (steal + drain pack) --------------------------
+
+def test_steal_with_migration_resumes_with_zero_reprefill():
+    """migrate_kv=True turns the steal path's re-prefill into a page-span
+    migration: the stolen entry lands on the thief with its KV resident
+    and resumes for free; the donor keeps nothing behind."""
+    eng = EngineGroup([make_slot(capacity=2) for _ in range(2)],
+                      migrate_kv=True)
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    uids = buf.load_prompts([[1, 2, 3, 4, 5], [6, 7, 8, 9, 2]])
+    buf.mark_running(uids)
+    eng.submit(buf.running(), version=0)
+    home0 = dict(eng._home)[uids[0]]
+    for _ in range(2):
+        for ev in eng.step():
+            buf.record_tokens(ev.uid, [ev.token], [ev.logprob], 0)
+            if ev.done:
+                buf.mark_done(ev.uid, ev.finish_reason)
+    for uid in eng.interrupt():
+        buf.scavenge(uid)
+    # saturate uid0's home replica so the resubmit must steal
+    eng.submit([BufferEntry(uid=100 + i, prompt=[3, 1, 4, 1 + i])
+                for i in range(3)], version=0)
+    assert eng.replicas[home0].free_slots() == 0
+    run_before = eng.cache_stats()["prefill_tokens_run"]
+    victim = buf.entries[uids[0]]
+    buf.mark_running([victim.uid])
+    eng.submit([victim], version=0)
+    st = eng.cache_stats()
+    assert eng.steal_count == 1 and eng.steal_migrations == 1
+    assert st["prefill_tokens_run"] == run_before, \
+        "migrated steal must not re-prefill"
+    assert st["resumed_without_prefill"] >= 1
+    assert st["migrated_pages"] >= 1
+    assert victim.uid not in eng.replicas[home0].kv.tables, \
+        "donor kept dead pages after migrating the span"
+    while eng.active_uids():
+        eng.step()
+    for r in eng.replicas:
+        r.kv.check_invariants()
+
+
+def test_drain_pack_consolidates_tail_and_releases_replicas():
+    """Once in-flight work fits on fewer replicas, drain_pack migrates the
+    tail onto them: donors go fully idle (released from the busy set) and
+    every packed entry still finishes exactly once."""
+    lengths = {i: 40 for i in range(8)}
+    eng = EngineGroup([SimEngine(capacity=2, max_gen_len=64, seed=i,
+                                 length_table=lengths)
+                       for i in range(4)], balancer="drain_pack")
+    assert eng.drain_pack and eng.migrate_kv
+    eng.submit([BufferEntry(uid=i, prompt=[1, 2 + i]) for i in range(8)],
+               version=0)
+    # empty six slots unevenly: survivors sit on two different replicas
+    homes = dict(eng._home)
+    survivors = []
+    for rep in (0, 2):
+        survivors.append(next(u for u, h in homes.items() if h == rep))
+    eng.interrupt([u for u in range(8) if u not in survivors])
+    eng.step()                       # quiet-interval guard: no pack yet
+    assert eng.packed_entries == 0
+    eng.step()                       # pack runs before the decode dispatch
+    assert eng.packed_entries == 1
+    active_per_rep = [len(r.active_uids()) for r in eng.replicas]
+    assert sorted(active_per_rep) == [0, 0, 0, 2], active_per_rep
+    done = set()
+    steps = 0
+    while eng.active_uids():
+        for ev in eng.step():
+            if ev.done:
+                assert ev.uid not in done
+                done.add(ev.uid)
+        steps += 1
+        assert steps < 1000
+    assert done == set(survivors)
+
+
+def test_drain_pack_skips_when_group_is_full():
+    lengths = {i: 20 for i in range(4)}
+    eng = EngineGroup([SimEngine(capacity=2, max_gen_len=64, seed=i,
+                                 length_table=lengths) for i in range(2)],
+                      balancer="drain_pack")
+    eng.submit([BufferEntry(uid=i, prompt=[1, 2 + i]) for i in range(4)],
+               version=0)
+    eng.step()
+    assert eng.packed_entries == 0, "a full group has no tail to pack"
+
+
+def test_drain_pack_greedy_token_identical_with_migration():
+    """Acceptance pin (extends, not relaxes, the lockstep identity): with
+    async stepping AND migration enabled (drain_pack balancer), greedy
+    EngineGroup(n=4) stays token-identical per uid to the single engine —
+    a packed slot resumes mid-flight on another replica with bit-equal
+    KV."""
+    prompts = _prompts(8)
+    single = _greedy_slot(capacity=8)
+    entries = [BufferEntry(uid=i, prompt=list(p))
+               for i, p in enumerate(prompts)]
+    single.submit(entries, version=0)
+    base = {e.uid: [] for e in entries}
+    # interrupt six uids after 2 steps: the tail shrinks to 2 entries
+    for _ in range(2):
+        for ev in single.step():
+            base[ev.uid].append(ev.token)
+    single.interrupt([u for u in range(8) if u not in (0, 5)])
+    while single.active_uids():
+        for ev in single.step():
+            base[ev.uid].append(ev.token)
+
+    group = EngineGroup([_greedy_slot(capacity=2) for _ in range(4)],
+                        balancer="drain_pack", async_step=True)
+    got = {e.uid: [] for e in entries}
+    group.submit([BufferEntry(uid=i, prompt=list(p))
+                  for i, p in enumerate(prompts)], version=0)
+    for _ in range(2):
+        for ev in group.step():
+            got[ev.uid].append(ev.token)
+    group.interrupt([u for u in range(8) if u not in (0, 5)])
+    steps = 0
+    while group.active_uids():
+        for ev in group.step():
+            got[ev.uid].append(ev.token)
+        steps += 1
+        assert steps < 1000
+    assert {u: got[u] for u in (0, 5)} == {u: base[u] for u in (0, 5)}
+    assert group.packed_entries >= 1, "tail never consolidated"
+    assert group.cache_stats()["migrated_pages"] >= 1
+    for r in group.replicas:
+        r.kv.check_invariants()
+
+
+# -- least_tokens EWMA length estimator ---------------------------------------
+
+def test_ewma_hint_error_shrinks_with_observed_completions():
+    """The routing hint starts from an uninformed prior (half the gen
+    budget) and converges toward observed completion lengths — the
+    groundwork for the backlog's length-hint learning."""
+    true_len = 10
+    lengths = {i: true_len for i in range(64)}
+    eng = EngineGroup([SimEngine(capacity=4, max_gen_len=512, seed=i,
+                                 length_table=lengths) for i in range(2)])
+    probe = BufferEntry(uid=999, prompt=[1, 2])
+    err0 = abs(eng._hint(probe) - true_len)
+    errs = [err0]
+    for start in range(0, 32, 8):
+        eng.submit([BufferEntry(uid=u, prompt=[1, 2 + u])
+                    for u in range(start, start + 8)], version=0)
+        while eng.active_uids():
+            eng.step()
+        errs.append(abs(eng._hint(probe) - true_len))
+    assert errs[-1] < errs[0], errs
+    assert errs[-1] < 1.0, f"EWMA should converge near {true_len}: {errs}"
+    assert all(a >= b - 1e-9 for a, b in zip(errs, errs[1:])), \
+        f"hint error must shrink as completions are observed: {errs}"
+
+
+def test_caller_length_hint_overrides_ewma():
+    lengths = {i: 10 for i in range(16)}
+    eng = EngineGroup([SimEngine(capacity=4, max_gen_len=512, seed=i,
+                                 length_table=lengths) for i in range(2)])
+    eng.submit([BufferEntry(uid=u, prompt=[1, 2 + u]) for u in range(8)],
+               version=0)
+    while eng.active_uids():
+        eng.step()
+    assert eng._ewma_len is not None
+    probe = BufferEntry(uid=999, prompt=[1, 2])
+    eng.length_hint = lambda e: 333.0
+    assert eng._hint(probe) == 333.0, "caller hint must override the EWMA"
+    eng.length_hint = None
+    assert eng._hint(probe) < 100.0          # back on the learned estimate
+
+
+# -- simulator residency (paged-engine resume semantics) ----------------------
+
+def test_sim_residency_resume_is_free_and_counted():
+    eng = SimEngine(capacity=2, max_gen_len=32, seed=0, kv_residency=True,
+                    length_table={0: 20, 1: 20})
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    uids = buf.load_prompts([[1, 2, 3], [4, 5, 6]])
+    buf.mark_running(uids)
+    eng.submit(buf.running(), version=0)
+    run0 = eng.prefill_tokens_run
+    assert run0 == 6
+    for _ in range(2):
+        for ev in eng.step():
+            buf.record_tokens(ev.uid, [ev.token], [ev.logprob], 0)
+    for uid in eng.interrupt():
+        buf.scavenge(uid)
+    resumed = buf.pending()
+    buf.mark_running([e.uid for e in resumed])
+    clock_before = eng.clock
+    eng.submit(resumed, version=0)
+    assert eng.clock == clock_before, "resident resume must charge nothing"
+    st = eng.cache_stats()
+    assert st["prefill_tokens_run"] == run0
+    assert st["resumed_without_prefill"] == 2
+    assert st["prefill_tokens_saved"] > 0
+
+
+def test_sim_strict_sync_drops_residency():
+    """kv_retain_across_sync=False mirrors the paged cache: a weight sync
+    invalidates every modeled residency, so post-sync re-rolls charge a
+    fresh prefill instead of resuming pre-sync KV for free."""
+    eng = SimEngine(capacity=2, max_gen_len=32, seed=0, kv_residency=True,
+                    kv_retain_across_sync=False, length_table={0: 20, 1: 20})
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    uids = buf.load_prompts([[1, 2, 3], [4, 5, 6]])
+    buf.mark_running(uids)
+    eng.submit(buf.running(), version=0)
+    for _ in range(2):
+        for ev in eng.step():
+            buf.record_tokens(ev.uid, [ev.token], [ev.logprob], 0)
+    for uid in eng.interrupt():
+        buf.scavenge(uid)
+    eng.sync_weights(1)
+    resumed = buf.pending()
+    buf.mark_running([e.uid for e in resumed])
+    clock_before = eng.clock
+    eng.submit(resumed, version=1)
+    assert eng.clock > clock_before, \
+        "stale residency must not serve a free resume under strict sync"
+    assert eng.cache_stats()["resumed_without_prefill"] == 0
+
+
+def test_drain_pack_routes_around_exhausted_destination_pool():
+    """A destination-local import failure (exhausted page pool) must not
+    strand the tail: packing falls through to the next keep replica that
+    can actually take the span."""
+    starved = make_slot(capacity=2, num_pages=2)    # 1 usable page
+    roomy = [make_slot(capacity=2) for _ in range(2)]
+    eng = EngineGroup([starved] + roomy, drain_pack=True)
+    # fully distinct prompts, or prefix co-routing would pile them up
+    eng.submit([BufferEntry(uid=i, prompt=[2 + i] * 4 + [6 + i])
+                for i in range(3)], version=0)
+    homes = dict(eng._home)
+    assert sorted(homes.values()) == [0, 1, 2], "entries must spread"
+    # 3 in-flight over capacity 6: packing wants keep=[r0, r1], donor=r2 —
+    # but r0's pool is full with its own active entry, so r2's entry must
+    # land on r1 instead of aborting the pass
+    eng.step()                       # quiet-interval guard: no pack yet
+    eng.step()
+    assert eng.packed_entries == 1
+    assert [len(r.active_uids()) for r in eng.replicas] == [1, 2, 0]
+    done = set()
+    steps = 0
+    while eng.active_uids():
+        for ev in eng.step():
+            if ev.done:
+                assert ev.uid not in done
+                done.add(ev.uid)
+        steps += 1
+        assert steps < 200
+    assert done == {0, 1, 2}
+    for r in eng.replicas:
+        r.kv.check_invariants()
+
+
+def test_sim_without_residency_keeps_charging_resumes():
+    eng = SimEngine(capacity=2, max_gen_len=32, seed=0,
+                    length_table={0: 20, 1: 20})
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    uids = buf.load_prompts([[1, 2, 3], [4, 5, 6]])
+    buf.mark_running(uids)
+    eng.submit(buf.running(), version=0)
+    for _ in range(2):
+        for ev in eng.step():
+            buf.record_tokens(ev.uid, [ev.token], [ev.logprob], 0)
+    for uid in eng.interrupt():
+        buf.scavenge(uid)
+    resumed = buf.pending()
+    buf.mark_running([e.uid for e in resumed])
+    clock_before = eng.clock
+    eng.submit(resumed, version=0)
+    assert eng.clock > clock_before, "default sim must re-charge the prefix"
+    assert eng.cache_stats()["resumed_without_prefill"] == 0
 
 
 # -- metrics flow -------------------------------------------------------------

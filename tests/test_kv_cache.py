@@ -184,6 +184,80 @@ def test_shared_pages_survive_donor_eviction():
     kv.check_invariants()
 
 
+# -- cross-pool migration -----------------------------------------------------
+
+def test_export_is_pure_and_import_moves_span():
+    src, dst = make_kv(page_size=4), make_kv(page_size=4)
+    key = (1, 2, 3, 4, 5, 6)
+    t0 = src.register_prefill(0, key)
+    src.deactivate(0)
+    ex = src.export_pages(0)
+    assert ex.pages == t0 and ex.tokens == list(key) and not ex.active
+    # export did not mutate the donor
+    assert src.tables[0] == t0 and 0 in src._resident
+    src.check_invariants()
+    t1 = dst.import_pages(ex)
+    assert len(t1) == len(t0)
+    assert dst.tokens[0] == list(key)
+    assert 0 in dst._resident and 0 not in dst._active
+    assert dst.stats.migrated_pages == len(t1)
+    # donor releases only after the importer accepted
+    src.release_seq(0)
+    assert src.pool.pages_in_use == 0
+    # the migrated span resumes with zero re-prefill on the destination
+    assert dst.try_resume(0, key)
+    assert dst.stats.prefill_tokens_run == 0
+    assert dst.stats.resumed_without_prefill == 1
+    dst.release_seq(0)
+    assert dst.pool.pages_in_use == 0
+    src.check_invariants(), dst.check_invariants()
+
+
+def test_import_active_entry_stays_active():
+    src, dst = make_kv(), make_kv()
+    src.register_prefill(7, (1, 2, 3))           # active (never deactivated)
+    ex = src.export_pages(7)
+    assert ex.active
+    dst.import_pages(ex)
+    assert 7 in dst._active and 7 not in dst._resident
+    src.release_seq(7), dst.release_seq(7)
+
+
+def test_import_rolls_back_on_exhausted_pool():
+    src = make_kv(page_size=2)
+    dst = PagedKVCache(num_pages=2, page_size=2)  # 1 usable page
+    src.register_prefill(0, (1, 2, 3, 4, 5))      # 3 pages — cannot fit
+    ex = src.export_pages(0)
+    with pytest.raises(PoolExhausted):
+        dst.import_pages(ex)
+    assert dst.pool.pages_in_use == 0, "failed import leaked pages"
+    assert 0 not in dst.tables
+    # donor copy untouched: the caller can fall back to re-prefill
+    assert src.tables[0] and src.tokens[0] == [1, 2, 3, 4, 5]
+    src.check_invariants(), dst.check_invariants()
+
+
+def test_imported_span_serves_as_prefix_donor():
+    """Migration must carry the donor keys, not re-key on the committed
+    sequence: a GRPO member that decoded past its prefill prefix still
+    attracts its siblings' PROMPT key on the destination pool."""
+    src, dst = make_kv(), make_kv()
+    key = (9, 8, 7)
+    src.register_prefill(0, key)
+    src.append_tokens([0], [5])          # decode past the prefill prefix
+    src.append_tokens([0], [4])
+    src.deactivate(0)
+    assert src.find_donor(key) == 0
+    dst.import_pages(src.export_pages(0))
+    src.release_seq(0)
+    assert dst.find_donor(key) == 0, \
+        "migrated entry stopped serving its prefill prefix"
+    dst.share(1, 0, key)
+    dst.release_many([0, 1])
+    assert dst.pool.pages_in_use == 0
+    dst.check_invariants()
+
+
 # -- block tables -------------------------------------------------------------
 
 def test_block_table_pads_with_garbage():
@@ -308,6 +382,84 @@ def test_cache_random_interleavings_hold_invariants(num_pages, page_size,
     assert kv.pool.pages_in_use == 0, "pages leaked after all frees"
     assert (kv.pool.refcount == 0).all()
     assert not kv._donors and not kv._donor_keys, "donor index leaked"
+
+
+@cases(max_examples=50,
+       pages_a=integers(4, 14),
+       pages_b=integers(4, 14),
+       page_size=integers(1, 4),
+       ops=lists(tuples(integers(0, 6), integers(0, 5), integers(0, 9)),
+                 min_size=1, max_size=70))
+def test_migration_random_interleavings_hold_invariants(pages_a, pages_b,
+                                                        page_size, ops):
+    """Random interleavings of prefill/share/COW/interrupt/MIGRATE across
+    TWO pools: refcounts match the tables on both sides at every step,
+    a failed import never half-lands a span, and after all frees both
+    pools are empty (zero leaks on donor AND destination)."""
+    pools = [PagedKVCache(pages_a, page_size),
+             PagedKVCache(pages_b, page_size)]
+
+    def other(side):
+        return pools[1 - side]
+
+    for opcode, uid, arg in ops:
+        side = arg % 2
+        kv = pools[side]
+        if opcode == 0 and all(uid not in p.tables for p in pools):
+            key = tuple(uid * 101 + j for j in range(1 + arg))
+            try:
+                kv.register_prefill(uid, key)
+            except PoolExhausted:
+                pass
+        elif opcode == 1 and all(uid not in p.tables for p in pools):
+            keys = sorted(kv._donors)
+            if keys:
+                key = keys[arg % len(keys)]
+                donor = kv.find_donor(key)
+                if donor is not None:
+                    kv.share(uid, donor, key)
+        elif opcode == 2:                               # decode step (COW)
+            active = sorted(kv._active)
+            if active:
+                u = active[arg % len(active)]
+                try:
+                    kv.prepare_step([u], [len(kv.tokens[u])])
+                except PoolExhausted:
+                    continue
+                kv.append_tokens([u], [arg])
+        elif opcode == 3:                               # interrupt
+            active = sorted(kv._active)
+            if active:
+                kv.deactivate(active[arg % len(active)])
+        elif opcode == 4:                               # resume
+            resident = sorted(kv._resident)
+            if resident:
+                u = resident[arg % len(resident)]
+                toks = kv.tokens[u]
+                n = 1 + arg % max(1, len(toks))
+                kv.try_resume(u, tuple(toks[:n]))
+        elif opcode == 5:                               # migrate -> other
+            movable = sorted(kv.tables)
+            if movable:
+                u = movable[arg % len(movable)]
+                ex = kv.export_pages(u)
+                try:
+                    other(side).import_pages(ex)
+                except PoolExhausted:
+                    pass                # donor copy survives the failure
+                else:
+                    kv.release_seq(u)   # accepted: donor lets go
+        elif opcode == 6:                               # finish
+            if uid in kv.tables:
+                kv.release_seq(uid)
+        for p in pools:
+            p.check_invariants()
+            assert (p.pool.refcount >= 0).all()
+    for p in pools:
+        p.release_many(list(p.tables))
+        assert p.pool.pages_in_use == 0, "pages leaked after all frees"
+        assert (p.pool.refcount == 0).all()
+        assert not p._donors and not p._donor_keys, "donor index leaked"
 
 
 @cases(max_examples=20,
