@@ -45,6 +45,7 @@ import random
 from typing import Dict, List
 
 from repro.core.buffer import Mode, StatefulRolloutBuffer
+from repro.core.engine_api import FaultInjector
 from repro.core.orchestrator import RolloutOrchestrator, SortedRLConfig
 from repro.core.policy import make_policy
 from repro.rollout.group import EngineGroup
@@ -70,7 +71,9 @@ def run_replicas(num_replicas: int, n: int, cap_total: int, update: int,
                  group_size: int, max_gen: int, median: float, sigma: float,
                  seed: int, balancer: str = "least_tokens",
                  oracle_hints: bool = True, async_step: bool = False,
-                 drain_pack: bool = False, kv_residency: bool = False) -> Dict:
+                 drain_pack: bool = False, kv_residency: bool = False,
+                 fault_plan: List | None = None,
+                 throttle_profile: List[float] | None = None) -> Dict:
     assert cap_total % num_replicas == 0
     lengths = _length_table(n, median, sigma, max_gen, seed)
     hint = ((lambda e: max(1, lengths.get(e.uid, max_gen) - e.gen_len))
@@ -81,7 +84,13 @@ def run_replicas(num_replicas: int, n: int, cap_total: int, update: int,
                    kv_residency=kv_residency)
          for i in range(num_replicas)],
         balancer=balancer, length_hint=hint, async_step=async_step,
-        drain_pack=drain_pack or None)
+        drain_pack=drain_pack or None,
+        fault_injector=FaultInjector(fault_plan) if fault_plan else None)
+    if throttle_profile is not None:
+        # a heterogeneous fleet: replica i decodes `throttle_profile[i]`x
+        # slower than the shared cost model's baseline
+        for i, factor in enumerate(throttle_profile):
+            engine.replicas[i].throttle(factor)
     buf = StatefulRolloutBuffer(Mode.PARTIAL)
     cfg = SortedRLConfig(mode=Mode.PARTIAL, rollout_batch=cap_total,
                          group_size=group_size, update_batch=update,
@@ -146,6 +155,37 @@ def main(smoke: bool = False) -> List[str]:
         f"packed={pk['packed_entries']:.0f} "
         f"resumed_free={pk['resumed_without_prefill']:.0f} "
         f"tput={pk['throughput_tok_per_s']:.0f}tok/s")
+    # failure tolerance: kill one of four replicas mid-run on the
+    # everything-on configuration — survivors absorb the dead replica's
+    # in-flight work (active transplant or resident-KV re-homing) and the
+    # workload still completes in full
+    kl = run_replicas(num_replicas=4, async_step=True, drain_pack=True,
+                      kv_residency=True, fault_plan=[(40, 3, "kill")], **kw)
+    rows.append(
+        f"replicas/r4_kill1,{kl['elapsed']*1e6:.0f},"
+        f"replica_bubble={kl['replica_bubble_ratio']:.4f} "
+        f"deaths={kl['replica_deaths']:.0f} "
+        f"rehomed={kl['rehomed_entries']:.0f} "
+        f"rerolled={kl['rerolled_entries']:.0f} "
+        f"tput={kl['throughput_tok_per_s']:.0f}tok/s")
+    # heterogeneous fleet (replica speeds 1x / 2x / 4x slower):
+    # throughput-weighted routing vs the speed-blind balancer on the
+    # identical workload — the row reports the weighted run and carries
+    # the uniform run's elapsed for comparison.  No oracle hints on
+    # either side: the row isolates speed-awareness (observed per-replica
+    # step cost), not length prediction
+    het_kw = dict(kw, cap_total=kw["cap_total"] // 4 * 3)
+    hu = run_replicas(num_replicas=3, async_step=True, oracle_hints=False,
+                      throttle_profile=[1.0, 2.0, 4.0], **het_kw)
+    hw = run_replicas(num_replicas=3, async_step=True, oracle_hints=False,
+                      balancer="weighted_tokens",
+                      throttle_profile=[1.0, 2.0, 4.0], **het_kw)
+    rows.append(
+        f"replicas/r3_hetero,{hw['elapsed']*1e6:.0f},"
+        f"replica_bubble={hw['replica_bubble_ratio']:.4f} "
+        f"busy_replicas={hw['replica_busy']:.2f} "
+        f"uniform_elapsed={hu['elapsed']*1e6:.0f} "
+        f"tput={hw['throughput_tok_per_s']:.0f}tok/s")
     # acceptance pins (smoke workload):
     #   1. sharding + length-aware balancing strictly reduces the
     #      per-replica bubble vs the single-engine baseline;
@@ -174,6 +214,19 @@ def main(smoke: bool = False) -> List[str]:
              pk["prefill_tokens_run"], pk["prompt_tokens"])
         assert (pk["prefill_tokens_saved"]
                 >= by_r[4]["prefill_tokens_saved"]), pk
+        # failure-tolerance pins: the kill row completes the whole
+        # workload (every owed update delivered) with exactly one death,
+        # re-homes at least one in-flight entry, and keeps the surviving
+        # fleet's bubble within 1.5x the no-fault everything-on baseline
+        assert kl["replica_deaths"] == 1, kl
+        assert kl["rehomed_entries"] >= 1, kl
+        assert kl["updates"] == kw["n"] // kw["update"], kl
+        assert (kl["replica_bubble_ratio"]
+                <= 1.5 * pk["replica_bubble_ratio"]), \
+            (kl["replica_bubble_ratio"], pk["replica_bubble_ratio"])
+        # heterogeneous-fleet pin: throughput-weighted routing never
+        # loses to speed-blind routing when replica speeds diverge 4x
+        assert hw["elapsed"] <= hu["elapsed"], (hw["elapsed"], hu["elapsed"])
     return rows
 
 

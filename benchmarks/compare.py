@@ -42,6 +42,7 @@ ABS_FLOOR_US = 1000.0   # ignore regressions smaller than 1 ms absolute
 REQUIRED_SMOKE_ROWS = (
     "replicas/r1", "replicas/r2", "replicas/r4", "replicas/r4_rr",
     "replicas/r4_async", "replicas/r4_pack",
+    "replicas/r4_kill1", "replicas/r3_hetero",
 )
 
 

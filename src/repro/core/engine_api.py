@@ -18,15 +18,110 @@ tail packing):
 
 Engines without these methods simply never migrate (the group falls back
 to release-and-re-prefill).
+
+Two further optional capabilities support fault tolerance and
+elasticity (again duck-typed, again optional):
+
+  * ``throttle(factor)`` — scale the engine's decode step cost by
+    ``factor`` (the simulator models a degraded replica; engines on a
+    real wall clock may ignore it);
+  * ``shutdown()`` — fence the engine: release every slot and drop all
+    resident KV, so a killed or scaled-down replica holds no pages.
+
+:class:`FaultInjector` is the deterministic fault plan the
+:class:`~repro.rollout.group.EngineGroup` consults at each group step —
+it decides WHEN a replica is killed / stalled / slowed; the group owns
+HOW (re-homing, re-roll, accounting).
 """
 from __future__ import annotations
 
 import dataclasses
+import random
 from typing import List, Optional, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
 from repro.core.buffer import BufferEntry
+
+
+# -----------------------------------------------------------------------------
+# fault injection (chaos testing surface)
+# -----------------------------------------------------------------------------
+
+FAULT_KINDS = ("kill", "stall", "slow")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault against one replica of an EngineGroup.
+
+    ``step`` is the 1-based group step index at which the fault fires
+    (faults apply at the START of that ``step()`` call, before any
+    replica is dispatched).  Kinds:
+
+      * ``kill``  — the replica fails permanently (fail-stop, detected
+        at the step boundary).  Its in-flight uids are re-homed to
+        survivors (KV migrated when the group runs ``migrate_kv=True``)
+        or released for a re-roll under the current policy version;
+      * ``stall`` — the replica makes no progress for ``duration`` group
+        steps, then resumes (a hung collective / network partition);
+      * ``slow``  — the replica's decode step cost is multiplied by
+        ``factor`` for ``duration`` group steps (thermal throttling, a
+        degraded host).  Ignored by engines without ``throttle()``.
+    """
+    step: int
+    replica: int
+    kind: str
+    duration: int = 1
+    factor: float = 4.0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {FAULT_KINDS}")
+        if self.step < 1:
+            raise ValueError(f"fault step must be >= 1, got {self.step}")
+
+
+class FaultInjector:
+    """A deterministic fault plan: which replica fails, how, and at which
+    group step.  Purely declarative — the EngineGroup polls :meth:`due`
+    once per ``step()`` and applies the returned faults itself, so the
+    same plan replayed against the same workload produces the same run.
+
+    Accepts :class:`FaultEvent` instances or plain tuples
+    ``(step, replica, kind[, duration[, factor]])`` (the
+    ``SessionConfig.fault_plan`` wire format).
+    """
+
+    def __init__(self, plan: Optional[Sequence] = None):
+        events = []
+        for item in (plan or []):
+            if not isinstance(item, FaultEvent):
+                item = FaultEvent(*item)
+            events.append(item)
+        self.plan: List[FaultEvent] = sorted(
+            events, key=lambda f: (f.step, f.replica))
+
+    @classmethod
+    def random_plan(cls, seed: int, n_replicas: int, horizon: int,
+                    n_faults: int = 1,
+                    kinds: Sequence[str] = FAULT_KINDS,
+                    max_duration: int = 4) -> "FaultInjector":
+        """Seed-deterministic random plan: ``n_faults`` faults drawn over
+        ``horizon`` group steps against ``n_replicas`` replicas.  String
+        seeding keeps the draw stable across processes and platforms."""
+        rng = random.Random(f"fault-plan:{seed}")
+        plan = [FaultEvent(step=rng.randint(1, max(1, horizon)),
+                           replica=rng.randrange(n_replicas),
+                           kind=kinds[rng.randrange(len(kinds))],
+                           duration=rng.randint(1, max_duration))
+                for _ in range(n_faults)]
+        return cls(plan)
+
+    def due(self, step: int) -> List[FaultEvent]:
+        """Faults scheduled to fire at group step ``step`` (1-based)."""
+        return [f for f in self.plan if f.step == step]
 
 
 @dataclasses.dataclass

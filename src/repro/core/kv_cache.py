@@ -449,6 +449,16 @@ class PagedKVCache:
         for uid in uids:
             self.deactivate(uid)
 
+    def purge(self) -> int:
+        """Release every sequence — active and resident alike.  The
+        fence for a killed or scaled-down replica's pool: afterwards no
+        table, donor record, or refcount survives (the pool is as empty
+        as at construction).  Returns the number of sequences dropped."""
+        uids = list(self.tables)
+        for uid in uids:
+            self.release_seq(uid)
+        return len(uids)
+
     # -- introspection ----------------------------------------------------
 
     def max_blocks(self, uids: Sequence[int]) -> int:

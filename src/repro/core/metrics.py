@@ -31,6 +31,13 @@ class RolloutMetrics:
     packed_entries: int = 0         # drain-phase tail-pack consolidations
     replica_busy: float = 0.0       # time-weighted mean busy-replica count
     replica_bubble_ratio: float = 0.0   # per-replica Eq. 4 on busy replicas
+    # chaos / elasticity gauges (fault injection, scale_up/scale_down)
+    replica_deaths: int = 0         # replicas lost to injected kills
+    rehomed_entries: int = 0        # in-flight entries migrated off a dying
+                                    # or scaled-down replica (zero re-prefill)
+    rerolled_entries: int = 0       # entries released for a re-roll (no
+                                    # survivor could take them)
+    scale_events: int = 0           # elastic scale_down + scale_up calls
 
     def record(self, running: int, dt: float, new_tokens: int = 0) -> None:
         if dt > 0:
@@ -59,6 +66,14 @@ class RolloutMetrics:
                                   int(stats.get("migrated_pages", 0)))
         self.packed_entries = max(self.packed_entries,
                                   int(stats.get("packed_entries", 0)))
+        self.replica_deaths = max(self.replica_deaths,
+                                  int(stats.get("replica_deaths", 0)))
+        self.rehomed_entries = max(self.rehomed_entries,
+                                   int(stats.get("rehomed_entries", 0)))
+        self.rerolled_entries = max(self.rerolled_entries,
+                                    int(stats.get("rerolled_entries", 0)))
+        self.scale_events = max(self.scale_events,
+                                int(stats.get("scale_events", 0)))
         if "replica_busy" in stats:
             self.replica_busy = float(stats["replica_busy"])
         if "replica_bubble_ratio" in stats:
@@ -98,6 +113,10 @@ class RolloutMetrics:
         self.steal_migrations += other.steal_migrations
         self.migrated_pages += other.migrated_pages
         self.packed_entries += other.packed_entries
+        self.replica_deaths += other.replica_deaths
+        self.rehomed_entries += other.rehomed_entries
+        self.rerolled_entries += other.rerolled_entries
+        self.scale_events += other.scale_events
         self.replica_busy = max(self.replica_busy, other.replica_busy)
         self.replica_bubble_ratio = max(self.replica_bubble_ratio,
                                         other.replica_bubble_ratio)
@@ -118,6 +137,10 @@ class RolloutMetrics:
             "steal_migrations": self.steal_migrations,
             "migrated_pages": self.migrated_pages,
             "packed_entries": self.packed_entries,
+            "replica_deaths": self.replica_deaths,
+            "rehomed_entries": self.rehomed_entries,
+            "rerolled_entries": self.rerolled_entries,
+            "scale_events": self.scale_events,
             "replica_busy": round(self.replica_busy, 3),
             "replica_bubble_ratio": round(self.replica_bubble_ratio, 4),
         }

@@ -124,6 +124,9 @@ class RolloutOrchestrator:
                                is not BasePolicy.admit_next_group)
         # paged engines expose page-pool gauges (occupancy, prefill saved)
         self._cache_stats = getattr(engine, "cache_stats", None)
+        # fault-tolerant groups surface uids whose replica died without a
+        # survivor able to take them; the orchestrator re-rolls those
+        self._take_failed = getattr(engine, "take_failed_uids", None)
 
     # -- scheduling snapshot -------------------------------------------------
 
@@ -198,6 +201,21 @@ class RolloutOrchestrator:
         self.metrics.record(len(events), dt, new_tokens=len(events))
         if self._cache_stats is not None:
             self.metrics.record_cache(self._cache_stats())
+        if self._take_failed is not None:
+            self._reroll_failed()
+
+    def _reroll_failed(self) -> None:
+        """Entries whose replica died without re-homing: their engine-side
+        state is gone, so scavenge them back to PENDING — the next fill
+        re-rolls them under the *current* policy version.  The buffer's
+        mode decides what survives (on-policy discards their tokens,
+        partial keeps them), exactly the early-termination rule, so group
+        lifecycle barriers are untouched."""
+        for uid in self._take_failed():
+            e = self.buffer.entries[uid]
+            if self.buffer.mode == Mode.ON_POLICY:
+                self.metrics.tokens_discarded += e.gen_len
+            self.buffer.scavenge(uid)
 
     # -- one rollout iteration: decode until harvest -------------------------
 

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.configs.base import AttnConfig, ModelConfig
 from repro.core.buffer import BufferEntry, Mode, StatefulRolloutBuffer
+from repro.core.engine_api import FaultInjector
 from repro.core.orchestrator import (RolloutOrchestrator, SortedRLConfig,
                                      UpdateRequest, UpdateResult)
 from repro.core.policy import make_policy
@@ -160,6 +161,12 @@ class SessionConfig:
     balancer: str = "least_tokens"    # EngineGroup routing (group.py registry)
     async_step: bool = False          # per-replica dispatch, no step barrier
     drain_pack: bool = False          # tail packing via KV migration
+    # chaos / elasticity: a deterministic fault plan the EngineGroup
+    # applies per group step — FaultEvent instances or plain tuples
+    # (step, replica, kind[, duration[, factor]]); requires
+    # num_replicas > 1 (faults are injected per replica)
+    fault_plan: Optional[List[Any]] = None
+    elastic: bool = False             # enable scale_up / scale_down
     mode: Mode = Mode.ON_POLICY
     rollout_batch: int = 32           # engine capacity (slots)
     group_size: int = 2
@@ -256,11 +263,19 @@ class RLSession:
                     f"rollout_batch={cfg.rollout_batch} must split evenly "
                     f"over num_replicas={n}")
             if n == 1:
+                if cfg.fault_plan:
+                    raise ValueError(
+                        "fault_plan requires num_replicas > 1 (faults are "
+                        "injected per replica of an EngineGroup)")
                 return build_one(0, cfg.rollout_batch)
+            injector = (FaultInjector(cfg.fault_plan)
+                        if cfg.fault_plan else None)
             return EngineGroup([build_one(i, cfg.rollout_batch // n)
                                 for i in range(n)], balancer=cfg.balancer,
                                async_step=cfg.async_step,
-                               drain_pack=cfg.drain_pack or None)
+                               drain_pack=cfg.drain_pack or None,
+                               fault_injector=injector,
+                               elastic=cfg.elastic)
 
         if cfg.engine == "slot":
             model = build_model(tiny_lm_config(len(vocab), cfg.d_model,

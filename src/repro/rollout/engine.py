@@ -465,6 +465,15 @@ class SlotEngine:
             self.kv.deactivate_many(out)   # keep pages resident for resume
         return out
 
+    def shutdown(self) -> None:
+        """Fence the engine (killed or scaled-down replica): release
+        every slot and purge the page pool, so the fleet holds no live
+        references to this replica.  Counters survive — the work done
+        before the fence was real."""
+        self.slots.release(self.slots.active_indices())
+        if self.paged:
+            self.kv.purge()
+
     # -- migration capability (EngineGroup work stealing / tail packing) ------
     #
     # A migrated entry carries its resident KV across page pools (span

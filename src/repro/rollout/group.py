@@ -93,13 +93,45 @@ The group keeps per-replica busy integrals on *replica-local* clocks:
 counters (``stale_kv_reuses`` et al summed across replicas), so the
 orchestrator's existing ``record_cache`` plumbing surfaces them as
 RolloutMetrics fields; ``replica_stats()`` keeps the per-replica detail.
+
+Failure tolerance & elasticity
+------------------------------
+The fleet is no longer immortal.  A :class:`FaultInjector` plan makes a
+replica die, stall, or slow at a chosen group step (deterministic under
+a seed); faults are applied at the START of ``step()``, before any
+replica dispatches.  On replica death the group re-homes the dead
+replica's in-flight uids: with ``migrate_kv=True`` the same
+export/import path work stealing uses transplants each entry — KV and
+all — onto a survivor with a free slot, so it keeps decoding with ZERO
+re-prefill (counted in ``rehomed_entries``); entries no survivor can
+take are released for a re-roll under the *current* policy version
+(``rerolled_entries``, drained by the orchestrator through
+``take_failed_uids()`` and scavenged back to PENDING — the buffer's
+mode decides what survives, so GRPO group barriers stay intact).  A
+dead replica is fenced (slots freed, resident KV dropped) and leaves
+``replica_busy`` / ``replica_bubble_ratio`` accounting: it accrues no
+further busy or capacity time, exactly like a drained instance in the
+Seer fleet view.
+
+``scale_down(r)`` / ``scale_up(engine)`` make the fleet elastic
+(``elastic=True``): scaling down is a *graceful* kill — drain-pack the
+replica's tail onto survivors via KV migration regardless of
+``migrate_kv`` (the move is voluntary, the state is healthy), re-roll
+the rest, fence — and scaling up appends a replica that joins at the
+group's current weight version and attracts work on the next submit.
+The ``weighted_tokens`` balancer routes heterogeneous fleets by
+estimated *drain time* (outstanding tokens x observed per-step cost /
+slot count), so a replica that steps twice as fast takes
+proportionally more work instead of the uniform share ``least_tokens``
+would give it.
 """
 from __future__ import annotations
 
 from typing import (Callable, Dict, List, Optional, Sequence, Tuple)
 
 from repro.core.buffer import BufferEntry
-from repro.core.engine_api import EngineProtocol, SlotTable, StepEvent
+from repro.core.engine_api import (EngineProtocol, FaultEvent, FaultInjector,
+                                   SlotTable, StepEvent)
 
 # -----------------------------------------------------------------------------
 # balancer registry
@@ -174,6 +206,25 @@ def round_robin_balancer() -> Balancer:
     return pick
 
 
+@register_balancer("weighted_tokens")
+def weighted_tokens_balancer() -> Balancer:
+    """Throughput-weighted routing for heterogeneous fleets: least
+    estimated *drain time* — outstanding tokens times the replica's
+    observed per-step cost, normalised by slot count — so a replica
+    that steps twice as fast (or is twice as wide) attracts
+    proportionally more work.  Until a replica's step cost has been
+    observed it assumes the fleet mean, which makes the cold-start
+    routing identical to ``least_tokens``."""
+    def pick(group: "EngineGroup", entry: BufferEntry,
+             free: List[int]) -> int:
+        def drain(i: int):
+            cap = max(1, group.replicas[i].capacity)
+            return ((group.load[i] + 1.0) * group.replica_step_cost(i) / cap,
+                    group.replicas[i].capacity - free[i], i)
+        return min((i for i in range(len(free)) if free[i] > 0), key=drain)
+    return pick
+
+
 @register_balancer("drain_pack")
 def drain_pack_balancer() -> Balancer:
     """Length-aware routing + drain-phase tail packing: routes exactly
@@ -210,6 +261,11 @@ class EngineGroup:
     replicas once pending work stops filling the group (implies
     ``migrate_kv``; also enabled by ``balancer="drain_pack"``).  All
     three default off, preserving PR-4 lockstep semantics exactly.
+
+    ``fault_injector`` attaches a deterministic chaos plan (kill /
+    stall / slow per replica, see the module docstring) and
+    ``elastic=True`` enables :meth:`scale_down` / :meth:`scale_up`;
+    both default off — a plain group is the PR-4 immortal fixed fleet.
     """
 
     def __init__(self, replicas: Sequence[EngineProtocol],
@@ -217,10 +273,11 @@ class EngineGroup:
                  length_hint: Optional[Callable[[BufferEntry], float]] = None,
                  async_step: bool = False,
                  drain_pack: Optional[bool] = None,
-                 migrate_kv: Optional[bool] = None):
+                 migrate_kv: Optional[bool] = None,
+                 fault_injector: Optional[FaultInjector] = None,
+                 elastic: bool = False):
         assert replicas, "EngineGroup needs at least one replica"
         self.replicas = list(replicas)
-        self.capacity = sum(r.capacity for r in self.replicas)
         self.balancer = (make_balancer(balancer)
                          if isinstance(balancer, str) else balancer)
         self.length_hint = length_hint
@@ -257,35 +314,62 @@ class EngineGroup:
         self._cap_time = [0.0] * n             # sum capacity   * dt
         self._busy_replicas_time = 0.0         # sum busy_replica_count * dt
         self._stepped_time = 0.0               # sum group-step dt (max over r)
+        # fault tolerance / elasticity
+        self.fault_injector = fault_injector
+        self.elastic = elastic
+        self.alive: List[bool] = [True] * n
+        self._step_index = 0                   # 1-based after first step()
+        self._stall_until = [0] * n            # last stalled step, inclusive
+        self._slow_until = [0] * n             # last throttled step, inclusive
+        self._dt_ewma: List[Optional[float]] = [None] * n  # per-step cost
+        self._failed_uids: List[int] = []      # await re-roll by the caller
+        self.replica_deaths = 0
+        self.rehomed_entries = 0               # migrated off a dying replica
+        self.rerolled_entries = 0              # released: no survivor took it
+        self.scale_events = 0                  # scale_down + scale_up calls
 
     # -- protocol: time & slot queries ------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        """Q of the *live* fleet: dead / scaled-down replicas stop
+        counting, so the orchestrator's fill and the policies' capacity-
+        relative thresholds track what can actually decode."""
+        return sum(r.capacity
+                   for i, r in enumerate(self.replicas) if self.alive[i])
 
     @property
     def clock(self) -> float:
         """Modeled-concurrent group wall clock (see __init__)."""
         return self._clock
 
+    def _alive_indices(self) -> List[int]:
+        return [i for i, a in enumerate(self.alive) if a]
+
     def free_slots(self) -> int:
-        return sum(r.free_slots() for r in self.replicas)
+        return sum(self.replicas[i].free_slots()
+                   for i in self._alive_indices())
 
     def active_uids(self) -> List[int]:
         out: List[int] = []
-        for r in self.replicas:
-            out.extend(r.active_uids())
+        for i in self._alive_indices():
+            out.extend(self.replicas[i].active_uids())
         return out
 
     @property
     def active_counts(self) -> List[int]:
+        # one entry per replica, dead included (fenced replicas read 0)
         return [len(r.active_uids()) for r in self.replicas]
 
     @property
     def slots(self) -> SlotTable:
-        """Read-only aggregate host-state snapshot: the replicas' SlotTable
-        rows concatenated in replica order (mutations do not propagate)."""
+        """Read-only aggregate host-state snapshot: the live replicas'
+        SlotTable rows concatenated in replica order (mutations do not
+        propagate)."""
         view = SlotTable(self.capacity)
         off = 0
-        for r in self.replicas:
-            t = r.slots
+        for i in self._alive_indices():
+            t = self.replicas[i].slots
             for name in ("uid", "active", "next_token", "kv_len", "kv_start",
                          "gen_count", "gen_budget"):
                 getattr(view, name)[off:off + t.capacity] = getattr(t, name)
@@ -310,6 +394,8 @@ class EngineGroup:
         release it explicitly (paged pool pages, or the simulator's
         modeled residency) instead of letting it crowd the pool until LRU
         pressure reaches it."""
+        if not self.alive[replica]:
+            return                      # fenced: nothing resident to drop
         r = self.replicas[replica]
         kv = getattr(r, "kv", None)
         if kv is not None:
@@ -354,8 +440,8 @@ class EngineGroup:
 
     def _resident_replica(self, key: Tuple[int, ...]) -> Optional[int]:
         """Replica already holding a donor for this prefill prefix."""
-        for i, r in enumerate(self.replicas):
-            kv = getattr(r, "kv", None)
+        for i in self._alive_indices():
+            kv = getattr(self.replicas[i], "kv", None)
             if kv is not None and kv.find_donor(key) is not None:
                 return i
         return None
@@ -375,6 +461,13 @@ class EngineGroup:
     def _route(self, entry: BufferEntry, free: List[int],
                key_dest: Dict[Tuple[int, ...], int]) -> int:
         home = self._home.get(entry.uid)
+        if home is not None and not self.alive[home]:
+            # the home died after this record was written (kill/scale
+            # cleanup removes records eagerly, but a record can reappear
+            # stale through caller-held handles): nothing is resident
+            # there any more — treat as fresh
+            self._home.pop(entry.uid, None)
+            home = None
         if home is None:
             return self._pick_fresh(entry, free, key_dest)
         if free[home] > 0:
@@ -397,7 +490,12 @@ class EngineGroup:
     def submit(self, entries: Sequence[BufferEntry], version: int) -> None:
         if not entries:
             return
-        free = [r.free_slots() for r in self.replicas]
+        # dead / scaled-down replicas advertise zero free slots, so no
+        # balancer (round_robin and least_loaded included) can route a
+        # late-arriving submit onto a fenced replica; drained-but-ALIVE
+        # replicas keep their free slots and rejoin on new work
+        free = [r.free_slots() if self.alive[i] else 0
+                for i, r in enumerate(self.replicas)]
         assert len(entries) <= sum(free), "not enough free slots"
         batches: List[List[BufferEntry]] = [[] for _ in self.replicas]
         key_dest: Dict[Tuple[int, ...], int] = {}
@@ -440,6 +538,10 @@ class EngineGroup:
         dt = r.clock - t0
         self._busy_time[i] += len(evs) * dt
         self._cap_time[i] += r.capacity * dt
+        if dt > 0:
+            # observed per-step cost, fed to the weighted_tokens balancer
+            d = self._dt_ewma[i]
+            self._dt_ewma[i] = dt if d is None else 0.8 * d + 0.2 * dt
         for ev in evs:
             if self._est.get(ev.uid, 0.0) >= 1.0:
                 self._est[ev.uid] -= 1.0
@@ -450,6 +552,15 @@ class EngineGroup:
         return evs, dt
 
     def step(self) -> List[StepEvent]:
+        # faults fire at the step boundary, before any replica dispatches
+        self._step_index += 1
+        if self.fault_injector is not None:
+            for f in self.fault_injector.due(self._step_index):
+                self._apply_fault(f)
+        for i in self._alive_indices():
+            if self._slow_until[i] and self._step_index > self._slow_until[i]:
+                self.replicas[i].throttle(1.0)   # degradation window over
+                self._slow_until[i] = 0
         # pack only when no work arrived since the previous step: the
         # orchestrator fills before every step, so a quiet interval with
         # free slots means pending is genuinely dry (drain), while a
@@ -458,7 +569,12 @@ class EngineGroup:
         if self.drain_pack and not self._submitted_since_step:
             self._maybe_pack()
         self._submitted_since_step = False
-        busy = [i for i, r in enumerate(self.replicas) if r.active_uids()]
+        # a stalled replica holds its entries but makes no progress this
+        # step (and accrues no busy/capacity time: it is wedged, not
+        # bubbling); a dead one is out of the fleet entirely
+        busy = [i for i, r in enumerate(self.replicas)
+                if self.alive[i] and self._step_index > self._stall_until[i]
+                and r.active_uids()]
         if not busy:
             return []
         streams: List[List[StepEvent]] = []
@@ -501,7 +617,8 @@ class EngineGroup:
         group (free slots survived the orchestrator's fill), consolidate
         the in-flight tail onto the fewest replicas that can hold it and
         let the drained replicas go idle (released from the busy set)."""
-        active = [len(r.active_uids()) for r in self.replicas]
+        active = [len(r.active_uids()) if self.alive[i] else 0
+                  for i, r in enumerate(self.replicas)]
         total = sum(active)
         if total == 0 or total >= self.capacity:
             return                      # empty, or pending still fills us
@@ -550,6 +667,190 @@ class EngineGroup:
                 self._remember_home(uid, dst)
                 self.packed_entries += 1
 
+    # -- fault handling & elasticity --------------------------------------
+
+    def _apply_fault(self, f: FaultEvent) -> None:
+        i = f.replica
+        if i >= len(self.replicas) or not self.alive[i]:
+            return                      # already dead, or never existed
+        if f.kind == "kill":
+            self._kill_replica(i)
+        elif f.kind == "stall":
+            self._stall_until[i] = max(self._stall_until[i],
+                                       self._step_index + f.duration - 1)
+        elif f.kind == "slow":
+            throttle = getattr(self.replicas[i], "throttle", None)
+            if throttle is not None:    # wall-clock engines can't be modeled
+                throttle(f.factor)
+                self._slow_until[i] = max(self._slow_until[i],
+                                          self._step_index + f.duration - 1)
+
+    def _kill_replica(self, i: int) -> None:
+        """Fail-stop replica death, detected at the step boundary.  Every
+        in-flight uid is re-homed onto a survivor (KV transplanted, zero
+        re-prefill) when ``migrate_kv`` and a survivor has room;
+        otherwise it is released for a re-roll under the current policy
+        version (its tokens so far were already reported through
+        ``step()``, so the buffer's mode decides what survives)."""
+        r = self.replicas[i]
+        self.alive[i] = False
+        self.replica_deaths += 1
+        for uid in list(r.active_uids()):
+            if self.migrate_kv and self._rehome(uid, i) is not None:
+                # a survivor had a free slot: the entry keeps decoding
+                # there, no rescheduling needed
+                self.rehomed_entries += 1
+            elif self.migrate_kv and self._rehome_resident(uid, i):
+                # the fleet runs full (no survivor slot free), but the KV
+                # fits a survivor's pool as RESIDENT state: hand the uid
+                # back for rescheduling — it routes home to the new
+                # replica and resumes with zero re-prefill
+                self.rehomed_entries += 1
+                self._reschedule(uid)
+            else:
+                self._release_for_reroll(uid)
+        self._fence(i)
+
+    def _rehome_resident(self, uid: int, src: int) -> bool:
+        """Migrate `uid`'s KV to a survivor as resident (non-active)
+        state: interrupt it on the dying replica (slot -> residency),
+        then export/import the resident handle.  Needs pool room on the
+        destination, not a free slot."""
+        self.replicas[src].interrupt([uid])
+        for dst in self._alive_indices():
+            if dst != src and self._migrate(uid, src, dst):
+                self._remember_home(uid, dst)
+                return True
+        return False
+
+    def _reschedule(self, uid: int) -> None:
+        """Hand a re-homed-as-resident uid back to the caller for a
+        resubmit (``take_failed_uids``).  Unlike a re-roll its home and
+        KV survive, so the resume is free."""
+        self._failed_uids.append(uid)
+        self._est.pop(uid, None)
+        self._gen_total.pop(uid, None)
+
+    def _rehome(self, uid: int, src: int) -> Optional[int]:
+        """Transplant `uid` from replica `src` onto the emptiest survivor
+        that accepts it (export -> import -> discard, the work-stealing
+        path); returns the destination, or None when nobody can take it
+        now.  Load and home-affinity records follow the entry."""
+        order = sorted(self._alive_indices(),
+                       key=lambda j: (len(self.replicas[j].active_uids()), j))
+        for dst in order:
+            if dst == src or self.replicas[dst].free_slots() <= 0:
+                continue
+            if self._migrate(uid, src, dst):
+                est = self._est.get(uid, 0.0)
+                self.load[src] = max(0.0, self.load[src] - est)
+                self.load[dst] += est
+                self._remember_home(uid, dst)
+                return dst
+        return None
+
+    def _release_for_reroll(self, uid: int) -> None:
+        """No survivor could take the uid: surrender it to the caller
+        (``take_failed_uids``) for a re-roll under the current policy
+        version, and forget every routing record (its engine-side state
+        is gone)."""
+        self._failed_uids.append(uid)
+        self.rerolled_entries += 1
+        self._est.pop(uid, None)
+        self._gen_total.pop(uid, None)
+        self._home.pop(uid, None)
+
+    def _fence(self, i: int) -> None:
+        """Seal off a dead or scaled-down replica: forget residency
+        records that point at it, zero its routing load, and release its
+        engine-side state so the fleet holds no references to it."""
+        for uid, h in list(self._home.items()):
+            if h == i:                  # pages died with the replica
+                del self._home[uid]
+        self.load[i] = 0.0
+        r = self.replicas[i]
+        shutdown = getattr(r, "shutdown", None)
+        if shutdown is not None:
+            shutdown()
+        else:
+            r.interrupt()
+
+    def take_failed_uids(self) -> List[int]:
+        """Drain the uids whose replica died (or scaled away) without a
+        survivor able to take them.  Their engine-side state is gone;
+        the caller must re-roll them — the orchestrator scavenges each
+        back to PENDING, so on-policy mode discards its tokens and
+        partial mode keeps them, exactly the interrupt rule."""
+        out, self._failed_uids = self._failed_uids, []
+        return out
+
+    def scale_down(self, i: int) -> None:
+        """Elastically release replica `i`: a graceful kill.  Its
+        in-flight tail drain-packs onto the survivors through the same
+        export/import path (the move is voluntary and the state healthy,
+        so migration is attempted regardless of ``migrate_kv``), entries
+        no survivor can hold are re-rolled, resident KV follows where it
+        can, and the replica is fenced out of capacity and accounting."""
+        assert self.elastic, "scale_down requires EngineGroup(elastic=True)"
+        assert self.alive[i], f"replica {i} is not alive"
+        assert sum(self.alive) > 1, "cannot scale down the last live replica"
+        r = self.replicas[i]
+        for uid in list(r.active_uids()):
+            if self._rehome(uid, i) is not None:
+                self.rehomed_entries += 1
+            elif self._rehome_resident(uid, i):
+                # survivors are slot-full: park the KV on one of them as
+                # resident state and hand the uid back for a resubmit
+                self.rehomed_entries += 1
+                self._reschedule(uid)
+            else:
+                self._release_for_reroll(uid)
+        # interrupted-but-resident uids keep their zero-re-prefill resume
+        # where a survivor can host the pages
+        for uid, h in list(self._home.items()):
+            if h != i:
+                continue
+            for dst in self._alive_indices():
+                if dst != i and self._migrate(uid, i, dst):
+                    self._remember_home(uid, dst)
+                    break
+        self.alive[i] = False
+        self.scale_events += 1
+        self._fence(i)
+
+    def scale_up(self, engine: EngineProtocol) -> int:
+        """Elastically add a replica; returns its index.  It joins at
+        the group's current weight version and advertises its free slots
+        immediately, so new work routes onto it on the next submit (and
+        ``weighted_tokens`` learns its speed from its first steps)."""
+        assert self.elastic, "scale_up requires EngineGroup(elastic=True)"
+        i = len(self.replicas)
+        self.replicas.append(engine)
+        self.alive.append(True)
+        self.load.append(0.0)
+        self._busy_time.append(0.0)
+        self._cap_time.append(0.0)
+        self._dt_ewma.append(None)
+        self._stall_until.append(0)
+        self._slow_until.append(0)
+        engine.sync_weights(self.version)
+        self._clock = max(self._clock, engine.clock)
+        self._max_gen = max(self._max_gen,
+                            getattr(engine, "max_gen_len", 0)) or self._max_gen
+        self.scale_events += 1
+        return i
+
+    def replica_step_cost(self, i: int) -> float:
+        """Observed per-decode-step cost of replica `i` (EWMA of its
+        replica-local step dt).  A replica not yet observed assumes the
+        fleet mean — and 1.0 before any observation at all, which makes
+        every replica equal (cold-start parity with ``least_tokens``)."""
+        d = self._dt_ewma[i]
+        if d is not None and d > 0:
+            return d
+        known = [x for x in self._dt_ewma if x is not None and x > 0]
+        return sum(known) / len(known) if known else 1.0
+
     def _finish(self, uid: int, replica: int) -> None:
         total = self._gen_total.pop(uid, 0)
         self._ewma_len = (float(total) if self._ewma_len is None
@@ -560,8 +861,23 @@ class EngineGroup:
 
     def interrupt(self, uids: Optional[Sequence[int]] = None) -> List[int]:
         out: List[int] = []
+        targets = None if uids is None else set(uids)
         for i, r in enumerate(self.replicas):
-            got = r.interrupt(uids)
+            if not self.alive[i]:
+                continue        # fenced: nothing left there to stop
+            if targets is not None:
+                # target the CURRENT holder: a steal or pack migration
+                # may have moved a uid off the replica the home-affinity
+                # map last recorded, so holders are resolved from live
+                # slot state — never from _home, which this path once
+                # indexed (the historical re-homing bug: interrupting a
+                # migrated uid hit its stale home and missed the entry)
+                held = targets.intersection(r.active_uids())
+                if not held:
+                    continue
+                got = r.interrupt(sorted(held))
+            else:
+                got = r.interrupt()
             for uid in got:
                 # keep _home: resident pages make this replica the uid's
                 # zero-re-prefill resume target
@@ -577,7 +893,8 @@ class EngineGroup:
         broadcasts overlap, so the group pays the slowest replica's
         sync latency once."""
         dt_group = 0.0
-        for r in self.replicas:
+        for i in self._alive_indices():
+            r = self.replicas[i]
             t0 = r.clock
             r.sync_weights(version)
             dt_group = max(dt_group, r.clock - t0)
@@ -610,6 +927,7 @@ class EngineGroup:
             cap = self._cap_time[i]
             rec = {
                 "capacity": float(r.capacity),
+                "alive": float(self.alive[i]),
                 "active": float(len(r.active_uids())),
                 "est_load": self.load[i],
                 "busy_time": self._busy_time[i],
@@ -633,9 +951,14 @@ class EngineGroup:
         for any replica type."""
         out: Dict[str, float] = {
             "num_replicas": float(len(self.replicas)),
+            "alive_replicas": float(sum(self.alive)),
             "steal_count": float(self.steal_count),
             "steal_migrations": float(self.steal_migrations),
             "packed_entries": float(self.packed_entries),
+            "replica_deaths": float(self.replica_deaths),
+            "rehomed_entries": float(self.rehomed_entries),
+            "rerolled_entries": float(self.rerolled_entries),
+            "scale_events": float(self.scale_events),
             "replica_busy": self.replica_busy,
             "replica_bubble_ratio": self.replica_bubble_ratio,
         }

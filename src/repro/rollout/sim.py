@@ -33,7 +33,8 @@ is off, preserving the pre-residency cost model (every resume re-charges
 its prefix) for existing benchmarks.  ``kv_retain_across_sync`` matches
 the paged cache's knob: with ``False`` (the on-policy setting) a weight
 sync drops every modeled residency, so re-rolls charge a fresh prefill
-exactly as :class:`~repro.core.kv_cache.PagedKVCache` would re-run it.  The engine also implements the
+exactly as :class:`~repro.core.kv_cache.PagedKVCache` would re-run it.
+The engine also implements the
 optional migration capability (:meth:`export_entry` /
 :meth:`import_entry` / :meth:`discard_entry`) the
 :class:`~repro.rollout.group.EngineGroup` uses for work stealing and
@@ -106,6 +107,7 @@ class SimEngine:
         self.kv_residency = kv_residency
         self.kv_retain_across_sync = kv_retain_across_sync
         self.rng = random.Random(seed)
+        self.throttle_factor = 1.0
         self._clock = 0.0
         self.slots = SlotTable(capacity)
         # finish reason per slot: True when the hidden target fits the budget
@@ -175,7 +177,7 @@ class SimEngine:
         act = t.active_indices()
         if act.size == 0:
             return []
-        self._clock += self.cost.step_time(int(act.size))
+        self._clock += self.cost.step_time(int(act.size)) * self.throttle_factor
         t.gen_count[act] += 1
         total = t.kv_start[act] + t.gen_count[act]
         done = total >= t.gen_budget[act]
@@ -200,6 +202,22 @@ class SimEngine:
                 # oldest residency first (consumed-without-resume uids)
                 del self._resident[next(iter(self._resident))]
         return out
+
+    # -- fault-tolerance surface (EngineGroup chaos / elasticity) ---------
+
+    def throttle(self, factor: float) -> None:
+        """Scale the decode step cost (a degraded replica: thermal
+        throttling, a sick host).  1.0 restores nominal speed; prefill
+        and sync latencies are left alone — the fault models a slow
+        decode loop, not a slow interconnect."""
+        self.throttle_factor = float(factor)
+
+    def shutdown(self) -> None:
+        """Fence the engine (killed or scaled-down replica): release
+        every slot and forget all modeled residency.  Counters survive —
+        the work done before the fence was real."""
+        self.slots.release(self.slots.active_indices())
+        self._resident.clear()
 
     # -- residency / cache surface (paged-engine-shaped) ------------------
 

@@ -1,0 +1,360 @@
+"""Chaos-conformance suite: the scheduling contract under replica loss.
+
+Every registered policy is driven through the shared RolloutOrchestrator
+against an EngineGroup whose FaultInjector kills one replica mid-group
+(step 3, while the first wave is in flight), over both engine backends
+(discrete-event SimEngine and real-decode SlotEngine) and replica counts
+{2, 4}.  With ``migrate_kv=True`` the group re-homes the dead replica's
+in-flight entries onto survivors (resident-KV migration when no slot is
+free), so the full contract must survive the fault:
+
+  * conservation — no uid is lost or duplicated: every loaded prompt is
+    still trained exactly once, re-rolls included;
+  * group barrier — trained lifecycles never decrease and strict
+    policies never mix epochs, even when a kill forces re-scheduling;
+  * drain — the fleet ends empty on the surviving replicas and the
+    death/re-home/re-roll counters record exactly what happened;
+  * zero re-prefill — entries re-homed with migration resume from their
+    migrated KV: total prefill work equals the no-fault workload.
+
+Also hosts the chaos proptest: seeded random interleavings of
+submit/step/interrupt/kill/stall/scale_down/scale_up against a two-pool
+SlotEngine fleet, holding page-pool invariants (refcounts == tables,
+donor-index consistency, zero leaked pages on fenced replicas) after
+every operation — the PR-4/5 KV interleaving suites, fleet-level.
+"""
+import pytest
+
+from engine_conformance import _tiny_model, make_slot
+from policy_conformance import CAPACITY, GROUP, MAX_GEN, N_PROMPTS, prompts
+from proptest import cases, integers, lists, tuples
+from repro.core.buffer import BufferEntry, EntryState, Mode, \
+    StatefulRolloutBuffer
+from repro.core.engine_api import FaultEvent, FaultInjector
+from repro.core.orchestrator import (RolloutOrchestrator, SortedRLConfig,
+                                     UpdateRequest)
+from repro.core.policy import available_policies, make_policy
+from repro.rollout.group import EngineGroup
+from repro.rollout.sim import SimEngine, lognormal_lengths
+from test_kv_cache import _donor_index_consistent
+
+pytestmark = pytest.mark.chaos
+
+KILL_STEP = 3        # first wave is in flight: the dead replica is busy
+
+
+def kill_last(n_replicas):
+    """One fail-stop kill of the highest-index replica mid-group."""
+    return FaultInjector([FaultEvent(step=KILL_STEP, replica=n_replicas - 1,
+                                     kind="kill")])
+
+
+def make_chaos_sim(n_replicas, migrate=True):
+    return EngineGroup(
+        [SimEngine(capacity=CAPACITY // n_replicas, max_gen_len=MAX_GEN,
+                   seed=i, kv_residency=True,
+                   length_sampler=lognormal_lengths(median=3, sigma=0.8,
+                                                    max_len=MAX_GEN))
+         for i in range(n_replicas)],
+        migrate_kv=migrate, fault_injector=kill_last(n_replicas))
+
+
+def make_chaos_slot(n_replicas):
+    return EngineGroup(
+        [make_slot(capacity=CAPACITY // n_replicas) for _ in range(n_replicas)],
+        migrate_kv=True, fault_injector=kill_last(n_replicas))
+
+
+CHAOS_FACTORIES = {
+    "sim2": lambda: make_chaos_sim(2),
+    "sim4": lambda: make_chaos_sim(4),
+    "slot2": lambda: make_chaos_slot(2),
+    "slot4": lambda: make_chaos_slot(4),
+}
+N_REPLICAS = {"sim2": 2, "sim4": 4, "slot2": 2, "slot4": 4}
+# jit-heavy real-decode sweeps stay out of the seconds-scale lane
+_PARAMS = [name if name.startswith("sim")
+           else pytest.param(name, marks=pytest.mark.slow)
+           for name in sorted(CHAOS_FACTORIES)]
+
+
+def build(policy_name, engine_name, mode=Mode.PARTIAL, **policy_kwargs):
+    eng = CHAOS_FACTORIES[engine_name]()
+    buf = StatefulRolloutBuffer(mode)
+    cfg = SortedRLConfig(mode=mode, rollout_batch=CAPACITY,
+                         group_size=GROUP, update_batch=CAPACITY,
+                         max_gen_len=MAX_GEN)
+    policy = make_policy(policy_name, **policy_kwargs)
+    batches = []
+
+    def train_fn(req: UpdateRequest):
+        batches.append((list(req.entries), req.group_epoch))
+
+    return RolloutOrchestrator(eng, buf, cfg, policy, train_fn), batches
+
+
+_DRIVE_CACHE = {}
+
+
+def drive(policy_name, engine_name, n_groups=2):
+    key = (policy_name, engine_name, n_groups)
+    if key not in _DRIVE_CACHE:
+        _DRIVE_CACHE[key] = _drive(policy_name, engine_name, n_groups)
+    return _DRIVE_CACHE[key]
+
+
+def _drive(policy_name, engine_name, n_groups):
+    if policy_name == "ungrouped":
+        stream = iter([(p, None) for p in prompts(n_groups * N_PROMPTS)])
+        orch, batches = build(policy_name, engine_name,
+                              prompt_stream=stream)
+        orch.run_steps(n_updates=n_groups * GROUP)
+        loaded = len(orch.buffer.entries)
+    elif policy_name == "pipelined":
+        orch, batches = build(policy_name, engine_name)
+        for g in range(n_groups):
+            orch.policy.queue_group(prompts(N_PROMPTS, start=g))
+        orch.run_queued()
+        loaded = n_groups * N_PROMPTS
+    else:
+        orch, batches = build(policy_name, engine_name)
+        for g in range(n_groups):
+            orch.run_group(prompts(N_PROMPTS, start=g))
+        loaded = n_groups * N_PROMPTS
+    return orch, batches, loaded
+
+
+@pytest.fixture(params=_PARAMS)
+def engine_name(request):
+    return request.param
+
+
+@pytest.fixture(params=available_policies())
+def policy_name(request):
+    return request.param
+
+
+# -- the contract under a mid-group kill, every policy x backend x fleet ------
+
+def test_chaos_conservation(policy_name, engine_name):
+    """A replica death loses no uid and duplicates none."""
+    orch, batches, loaded = drive(policy_name, engine_name)
+    uids = [e.uid for b, _ in batches for e in b]
+    assert len(uids) == len(set(uids)), "an entry trained twice after a kill"
+    if policy_name == "ungrouped":
+        consumed = {u for u, e in orch.buffer.entries.items()
+                    if e.state == EntryState.CONSUMED}
+        assert set(uids) == consumed
+        assert len(uids) + sum(
+            e.state != EntryState.CONSUMED
+            for e in orch.buffer.entries.values()) == loaded
+    else:
+        assert sorted(uids) == list(range(loaded)), \
+            "a kill must not lose or duplicate any loaded prompt"
+
+
+def test_chaos_group_barrier(policy_name, engine_name):
+    orch, batches, _ = drive(policy_name, engine_name)
+    if policy_name == "ungrouped":
+        return   # explicitly barrier-free
+    lifecycles = [e.lifecycle for b, _ in batches for e in b]
+    assert lifecycles == sorted(lifecycles), \
+        "a kill let a later group train before an earlier one"
+    if orch.policy.strict_group_barrier:
+        for b, epoch in batches:
+            assert all(e.lifecycle == epoch for e in b), \
+                "strict policy mixed group epochs after a kill"
+
+
+def test_chaos_death_recorded_and_fleet_drains(policy_name, engine_name):
+    orch, batches, loaded = drive(policy_name, engine_name)
+    st = orch.engine.cache_stats()
+    assert st["replica_deaths"] == 1.0
+    assert st["alive_replicas"] == N_REPLICAS[engine_name] - 1
+    # the dying replica was mid-wave: its in-flight work was re-homed
+    # (migrate_kv=True) or released for a re-roll — never dropped
+    assert st["rehomed_entries"] + st["rerolled_entries"] >= 1
+    # survivors drain the whole workload
+    assert orch.engine.free_slots() == orch.engine.capacity
+    if policy_name != "ungrouped":
+        assert orch.buffer.group_clear()
+        assert sum(len(b) for b, _ in batches) == loaded
+    # counters surfaced through the orchestrator's metrics
+    assert orch.metrics.replica_deaths == 1
+
+
+def test_chaos_buffer_invariants(policy_name, engine_name):
+    orch, _, _ = drive(policy_name, engine_name)
+    orch.buffer.check_invariants()
+
+
+# -- zero re-prefill for re-homed-with-migration entries ----------------------
+
+def test_sim_rehome_resumes_with_zero_reprefill():
+    """migrate_kv=True: total prefill work equals the no-fault workload —
+    the dead replica's entries resume from migrated KV, not a re-run."""
+    orch, _, loaded = drive("sorted", "sim4")
+    st = orch.engine.cache_stats()
+    assert st["rehomed_entries"] >= 1
+    assert st["rerolled_entries"] == 0
+    plen = len(prompts(1)[0])
+    assert st["prefill_tokens_run"] == loaded * plen, \
+        "re-homed entries must not pay a second prefill"
+
+
+def test_sim_kill_without_migration_rerolls():
+    """migrate_kv=False models hard KV loss: the dead replica's in-flight
+    entries are released and re-rolled under the current policy version."""
+    eng = make_chaos_sim(2, migrate=False)
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    cfg = SortedRLConfig(mode=Mode.PARTIAL, rollout_batch=CAPACITY,
+                         group_size=GROUP, update_batch=CAPACITY,
+                         max_gen_len=MAX_GEN)
+    batches = []
+    orch = RolloutOrchestrator(eng, buf, cfg, make_policy("sorted"),
+                               lambda req: batches.append(list(req.entries)))
+    orch.run_group(prompts(N_PROMPTS))
+    st = eng.cache_stats()
+    assert st["replica_deaths"] == 1.0
+    assert st["rerolled_entries"] >= 1 and st["rehomed_entries"] == 0
+    uids = sorted(e.uid for b in batches for e in b)
+    assert uids == list(range(N_PROMPTS)), "re-rolls must conserve uids"
+    # the re-rolled prompts paid a second prefill (nothing to resume from)
+    plen = len(prompts(1)[0])
+    assert st["prefill_tokens_run"] > N_PROMPTS * plen
+
+
+def _greedy_slot(capacity):
+    # temperature 0: the continuation is a pure function of the KV state,
+    # so token identity proves the migrated pages are the right pages
+    from repro.rollout.engine import SlotEngine
+    t = _tiny_model()
+    return SlotEngine(t["model"], lambda: t["params"], capacity=capacity,
+                      max_total_len=64, max_gen_len=8, eos_id=-1,
+                      pad_id=t["pad"], temperature=0.0)
+
+
+@pytest.mark.slow
+def test_slot_kill_rehomes_resident_kv_and_resumes_free():
+    """Real-decode fleet: at kill time the survivor is slot-full, so the
+    dying replica's entries re-home via RESIDENT-KV migration; once the
+    survivor frees slots they resume from the migrated pages with zero
+    re-prefill and token-identical continuations."""
+    eng = EngineGroup([_greedy_slot(capacity=2) for _ in range(2)],
+                      migrate_kv=True,
+                      fault_injector=kill_last(2))
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    ps = [[1, 2, 3, 4 + i] for i in range(4)]
+    uids = buf.load_prompts(ps)
+    buf.mark_running(uids)
+    eng.submit(buf.running(), version=0)
+    victims = sorted(u for u, h in dict(eng._home).items() if h == 1)
+    assert victims, "replica 1 must hold part of the wave"
+
+    def pump():
+        for ev in eng.step():
+            buf.record_tokens(ev.uid, [ev.token], [ev.logprob], 0)
+            if ev.done:
+                buf.mark_done(ev.uid, ev.finish_reason)
+    pump()                       # step 1
+    pump()                       # step 2
+    pump()                       # step 3: kill fires before dispatch
+    st = eng.cache_stats()
+    assert st["replica_deaths"] == 1.0
+    assert st["rehomed_entries"] == len(victims), \
+        "slot-full survivor: every victim re-homes via resident migration"
+    assert st["migrated_pages"] >= 1
+    failed = eng.take_failed_uids()
+    assert sorted(failed) == victims
+    for uid in failed:
+        buf.scavenge(uid)        # partial mode: keeps generated tokens
+    # drain the survivor's own wave, then resume the re-homed entries
+    steps = 0
+    while eng.active_uids():
+        pump()
+        steps += 1
+        assert steps < 100
+    run_before = eng.cache_stats()["prefill_tokens_run"]
+    resumable = [buf.entries[u] for u in victims]
+    buf.mark_running(victims)
+    eng.submit(resumable, version=0)
+    st = eng.cache_stats()
+    assert st["prefill_tokens_run"] == run_before, \
+        "re-homed-with-migration entries must resume at zero re-prefill"
+    assert st["resumed_without_prefill"] >= len(victims)
+    steps = 0
+    while eng.active_uids():
+        pump()
+        steps += 1
+        assert steps < 100
+    # token identity: the migrated continuation matches an undisturbed run
+    solo = _greedy_slot(capacity=4)
+    ref = {}
+    solo.submit([BufferEntry(uid=100 + i, prompt=list(p))
+                 for i, p in enumerate(ps)], version=0)
+    while solo.active_uids():
+        for ev in solo.step():
+            ref.setdefault(ev.uid - 100, []).append(ev.token)
+    for i, u in enumerate(uids):
+        assert list(buf.entries[u].generated) == ref[i], \
+            f"uid {u}: kill+re-home changed the token stream"
+    for i in eng._alive_indices():
+        eng.replicas[i].kv.check_invariants()
+
+
+# -- chaos proptest: random fault interleavings on a two-pool fleet -----------
+
+def _fleet_invariants(eng):
+    for i, r in enumerate(eng.replicas):
+        if eng.alive[i]:
+            r.kv.check_invariants()        # refcounts == page tables
+            _donor_index_consistent(r.kv)
+        else:
+            assert r.kv.pool.pages_in_use == 0, \
+                f"fenced replica {i} leaked pages after re-homing"
+            assert not r.kv._donors and not r.kv._donor_keys
+
+
+@pytest.mark.slow
+@cases(max_examples=8,
+       ops=lists(tuples(integers(0, 6), integers(0, 3), integers(0, 9)),
+                 min_size=6, max_size=26))
+def test_chaos_random_interleavings_hold_pool_invariants(ops):
+    """Random interleavings of submit/step/interrupt/kill/stall/
+    scale_down/scale_up against a two-pool SlotEngine fleet: after every
+    operation each survivor's page pool stays internally consistent and
+    fenced replicas hold zero pages; final shutdown leaks nothing."""
+    eng = EngineGroup([make_slot(capacity=2, eos_id=-1) for _ in range(2)],
+                      migrate_kv=True, elastic=True)
+    next_uid = 0
+    for op, rsel, usel in ops:
+        alive = eng._alive_indices()
+        if op == 0 and eng.free_slots() > 0:            # submit fresh work
+            e = BufferEntry(uid=next_uid,
+                            prompt=[1, 2 + next_uid % 7, 3, 4 + usel % 5])
+            next_uid += 1
+            eng.submit([e], version=0)
+        elif op == 1:                                   # decode step
+            eng.step()
+        elif op == 2 and eng.active_uids():             # targeted interrupt
+            active = sorted(eng.active_uids())
+            eng.interrupt([active[usel % len(active)]])
+        elif op == 3 and len(alive) > 1:                # fail-stop kill
+            eng._apply_fault(FaultEvent(step=1, replica=alive[rsel % len(alive)],
+                                        kind="kill"))
+        elif op == 4:                                   # transient stall
+            eng._apply_fault(FaultEvent(step=1, replica=alive[rsel % len(alive)],
+                                        kind="stall", duration=1 + usel % 3))
+        elif op == 5 and len(alive) > 1:                # graceful drain
+            eng.scale_down(alive[rsel % len(alive)])
+        elif op == 6 and len(eng.replicas) < 4:         # elastic grow
+            eng.scale_up(make_slot(capacity=2, eos_id=-1))
+        eng.take_failed_uids()      # re-rolls go back to the (absent) buffer
+        _fleet_invariants(eng)
+    eng.interrupt()                 # actives -> resident
+    for i in eng._alive_indices():
+        eng.replicas[i].shutdown()
+    for r in eng.replicas:
+        assert r.kv.pool.pages_in_use == 0, "pages leaked at teardown"
+        assert (r.kv.pool.refcount == 0).all()
+        assert not r.kv._donors and not r.kv._donor_keys, "donor index leaked"

@@ -538,3 +538,220 @@ def test_session_single_replica_stays_plain_engine():
                         max_gen_len=32)
     sess = RLSession.from_config(cfg)
     assert isinstance(sess.engine, SimEngine)
+
+
+# -- fault injection, re-homing, and elasticity -------------------------------
+
+def test_fault_injector_plan_is_deterministic_and_validated():
+    from repro.core.engine_api import FaultEvent, FaultInjector
+    a = FaultInjector.random_plan(seed=7, n_replicas=4, horizon=50,
+                                  n_faults=5)
+    b = FaultInjector.random_plan(seed=7, n_replicas=4, horizon=50,
+                                  n_faults=5)
+    assert a.plan == b.plan, "same seed must give the same fault plan"
+    c = FaultInjector.random_plan(seed=8, n_replicas=4, horizon=50,
+                                  n_faults=5)
+    assert a.plan != c.plan
+    inj = FaultInjector([(3, 1, "kill"), (3, 0, "stall", 2)])
+    assert [f.kind for f in inj.due(3)] == ["stall", "kill"]  # sorted
+    assert inj.due(4) == []
+    with pytest.raises(ValueError):
+        FaultInjector([(0, 1, "kill")])         # steps are 1-based
+    with pytest.raises(ValueError):
+        FaultInjector([(3, 1, "explode")])      # unknown fault kind
+
+
+def test_interrupt_targets_current_holder_not_stale_home():
+    """Regression: targeted interrupts must resolve the uid's holder from
+    live slot state.  A stale home record (left behind by a steal
+    migration) once sent the interrupt to a replica that no longer held
+    the entry, leaking the real slot."""
+    eng = make_group_sim(capacity=4, n_replicas=2)
+    eng.submit([BufferEntry(uid=0, prompt=[1, 2, 3])], version=0)
+    holder = dict(eng._home)[0]
+    eng._home[0] = 1 - holder           # poison: point home at the peer
+    got = eng.interrupt([0])
+    assert got == [0]
+    assert eng.replicas[holder].free_slots() == 2, \
+        "interrupt must free the slot on the actual holder"
+    assert eng.free_slots() == eng.capacity
+
+
+def test_drained_replica_rejoins_on_new_work():
+    """Regression: a replica released by drain-phase packing is still
+    ALIVE — a late-arriving submit must be able to route onto it (and its
+    slots must count as free), instead of treating it like a fenced
+    replica."""
+    lengths = {i: 40 for i in range(16)}
+    eng = EngineGroup([SimEngine(capacity=2, max_gen_len=64, seed=i,
+                                 length_table=lengths)
+                       for i in range(4)], balancer="drain_pack")
+    eng.submit([BufferEntry(uid=i, prompt=[1, 2 + i]) for i in range(8)],
+               version=0)
+    homes = dict(eng._home)
+    survivors = [next(u for u, h in homes.items() if h == rep)
+                 for rep in (0, 2)]
+    eng.interrupt([u for u in range(8) if u not in survivors])
+    eng.step()
+    eng.step()                          # pack: survivors consolidate
+    assert eng.packed_entries == 1
+    idle = [i for i, r in enumerate(eng.replicas) if not r.active_uids()]
+    assert len(idle) == 3
+    # all drained slots still count toward the group's free capacity
+    assert eng.free_slots() == 6
+    fresh = [BufferEntry(uid=100 + i, prompt=[9 + i, 8, 7])
+             for i in range(6)]
+    eng.submit(fresh, version=0)        # needs the drained replicas
+    new_homes = dict(eng._home)
+    assert any(new_homes[e.uid] in idle for e in fresh), \
+        "new work must be routable onto drained-but-alive replicas"
+    assert set(eng.active_uids()) == set(survivors) | {e.uid for e in fresh}
+    evs = eng.step()
+    assert {ev.uid for ev in evs} >= {e.uid for e in fresh}, \
+        "rejoined replicas must actually step their new work"
+
+
+@pytest.mark.parametrize("balancer", ["round_robin", "least_loaded",
+                                      "least_tokens", "weighted_tokens"])
+def test_dead_replica_never_selected(balancer):
+    """Regression: a fenced replica's SlotTable reads fully free after
+    shutdown — no balancer may route new work onto it."""
+    from repro.core.engine_api import FaultEvent
+    eng = EngineGroup([SimEngine(capacity=2, max_gen_len=8, seed=i)
+                       for i in range(2)], balancer=balancer)
+    eng._apply_fault(FaultEvent(step=1, replica=1, kind="kill"))
+    assert eng.capacity == 2 and eng.free_slots() == 2
+    es = [BufferEntry(uid=i, prompt=[5 + i, 6, 7]) for i in range(2)]
+    eng.submit(es, version=0)
+    assert all(h == 0 for h in dict(eng._home).values())
+    assert not eng.replicas[1].active_uids()
+    with pytest.raises(AssertionError):
+        eng.submit([BufferEntry(uid=9, prompt=[1, 2])], version=0)
+
+
+def test_kill_rehomes_actives_to_survivor_with_free_slots():
+    from repro.core.engine_api import FaultEvent, FaultInjector
+    inj = FaultInjector([FaultEvent(step=2, replica=1, kind="kill")])
+    eng = EngineGroup([SimEngine(capacity=2, max_gen_len=16, seed=i,
+                                 kv_residency=True,
+                                 length_table={0: 12, 1: 12})
+                       for i in range(2)], migrate_kv=True,
+                      fault_injector=inj)
+    eng.submit([BufferEntry(uid=0, prompt=[1, 2, 3]),
+                BufferEntry(uid=1, prompt=[4, 5, 6])], version=0)
+    assert dict(eng._home) == {0: 0, 1: 1}
+    eng.step()
+    evs = eng.step()                    # kill fires: uid1 transplants to r0
+    assert eng.alive == [True, False]
+    assert eng.rehomed_entries == 1 and eng.rerolled_entries == 0
+    assert dict(eng._home)[1] == 0
+    assert sorted(eng.active_uids()) == [0, 1]
+    assert {ev.uid for ev in evs} == {0, 1}, "transplant resumes same step"
+    assert eng.take_failed_uids() == []
+
+
+def test_stall_pauses_replica_without_losing_work():
+    from repro.core.engine_api import FaultEvent, FaultInjector
+    inj = FaultInjector([FaultEvent(step=2, replica=1, kind="stall",
+                                    duration=2)])
+    eng = EngineGroup([SimEngine(capacity=1, max_gen_len=16, seed=i,
+                                 length_table={0: 8, 1: 8})
+                       for i in range(2)], fault_injector=inj)
+    eng.submit([BufferEntry(uid=0, prompt=[1, 2, 3]),
+                BufferEntry(uid=1, prompt=[4, 5, 6])], version=0)
+    assert {ev.uid for ev in eng.step()} == {0, 1}
+    for _ in range(2):                  # stalled steps: only replica 0 runs
+        assert {ev.uid for ev in eng.step()} == {0}
+    assert {ev.uid for ev in eng.step()} == {0, 1}, "stall must expire"
+    assert eng.alive == [True, True] and eng.replica_deaths == 0
+
+
+def test_slow_fault_inflates_replica_step_cost():
+    from repro.core.engine_api import FaultEvent, FaultInjector
+    inj = FaultInjector([FaultEvent(step=1, replica=1, kind="slow",
+                                    duration=4, factor=8.0)])
+    eng = EngineGroup([SimEngine(capacity=1, max_gen_len=32, seed=0,
+                                 length_table={0: 20, 1: 20})
+                       for i in range(2)], fault_injector=inj)
+    eng.submit([BufferEntry(uid=0, prompt=[1, 2, 3]),
+                BufferEntry(uid=1, prompt=[4, 5, 6])], version=0)
+    for _ in range(3):
+        eng.step()
+    assert eng.replica_step_cost(1) > 2.0 * eng.replica_step_cost(0)
+    for _ in range(3):                  # past duration: throttle restored
+        eng.step()
+    assert eng.replicas[1].throttle_factor == 1.0
+
+
+def test_weighted_tokens_routes_around_slow_replica():
+    """The throughput-weighted balancer sends fresh work to the replica
+    with the cheapest observed step time, not just the fewest tokens."""
+    eng = EngineGroup([SimEngine(capacity=2, max_gen_len=32, seed=i,
+                                 length_table={i: 24 for i in range(8)})
+                       for i in range(2)], balancer="weighted_tokens")
+    eng.replicas[1].throttle(6.0)
+    eng.submit([BufferEntry(uid=0, prompt=[1, 2, 3]),
+                BufferEntry(uid=1, prompt=[4, 5, 6])], version=0)
+    assert dict(eng._home) == {0: 0, 1: 1}   # cold start: index order
+    for _ in range(3):
+        eng.step()                      # observe per-replica step costs
+    eng.submit([BufferEntry(uid=2, prompt=[7, 8, 9])], version=0)
+    assert dict(eng._home)[2] == 0, \
+        "fresh work must prefer the fast replica despite equal loads"
+
+
+def test_scale_down_migrates_and_scale_up_extends():
+    entries = [BufferEntry(uid=i, prompt=[1, 2 + i, 3]) for i in range(4)]
+    eng = EngineGroup([SimEngine(capacity=2, max_gen_len=32, seed=i,
+                                 kv_residency=True,
+                                 length_table={i: 20 for i in range(8)})
+                       for i in range(2)], elastic=True)
+    eng.submit(entries, version=0)
+    eng.step()
+    eng.scale_down(1)                   # graceful drain of replica 1
+    assert eng.alive == [True, False] and eng.scale_events == 1
+    # the survivor is slot-full, so replica 1's actives re-home as
+    # RESIDENT KV on replica 0 and come back for a resubmit — a graceful
+    # drain never re-rolls salvageable state
+    assert eng.rehomed_entries == 2 and eng.rerolled_entries == 0
+    assert eng.capacity == 2 and len(eng.active_uids()) == 2
+    parked = eng.take_failed_uids()
+    assert len(parked) == 2
+    assert all(dict(eng._home)[u] == 0 for u in parked)
+    with pytest.raises(AssertionError):
+        eng.scale_down(0)               # never scale away the last replica
+    j = eng.scale_up(SimEngine(capacity=4, max_gen_len=32, seed=9,
+                               kv_residency=True))
+    assert j == 2 and eng.scale_events == 2 and eng.capacity == 6
+    assert eng.replicas[j].version == eng.version
+    eng.submit([entries[u] for u in parked], version=0)
+    eng.submit([BufferEntry(uid=10, prompt=[8, 9])], version=0)
+    assert dict(eng._home)[10] == j, "new capacity must absorb new work"
+    done, steps = set(), 0
+    while eng.active_uids():
+        done |= {ev.uid for ev in eng.step() if ev.done}
+        steps += 1
+        assert steps < 500
+    assert done == {0, 1, 2, 3, 10}, "every entry finishes exactly once"
+
+
+def test_session_wires_fault_plan_and_elastic():
+    from repro.rl.session import RLSession, SessionConfig
+    cfg = SessionConfig(task="logic", policy="sorted", engine="sim",
+                        num_replicas=2, rollout_batch=8, update_batch=8,
+                        group_size=2, n_groups=1, mode=Mode.PARTIAL,
+                        max_gen_len=32, fault_plan=[(3, 1, "kill")],
+                        elastic=True)
+    sess = RLSession.from_config(cfg)
+    assert sess.engine.fault_injector is not None
+    assert sess.engine.elastic
+    out = sess.run()
+    assert out["rollout_metrics"]["replica_deaths"] == 1
+
+
+def test_session_rejects_fault_plan_on_single_replica():
+    from repro.rl.session import RLSession, SessionConfig
+    cfg = SessionConfig(task="logic", engine="sim", num_replicas=1,
+                        rollout_batch=8, fault_plan=[(3, 0, "kill")])
+    with pytest.raises(ValueError):
+        RLSession.from_config(cfg)
