@@ -102,17 +102,34 @@ class FaultInjector:
             events.append(item)
         self.plan: List[FaultEvent] = sorted(
             events, key=lambda f: (f.step, f.replica))
+        # step -> events index: due() is polled every group step, and the
+        # serving loop steps without a horizon, so the lookup must not
+        # scan the whole plan each time
+        self._by_step: dict = {}
+        for f in self.plan:
+            self._by_step.setdefault(f.step, []).append(f)
 
     @classmethod
-    def random_plan(cls, seed: int, n_replicas: int, horizon: int,
+    def random_plan(cls, seed: int, n_replicas: int,
+                    horizon: Optional[int] = None,
                     n_faults: int = 1,
                     kinds: Sequence[str] = FAULT_KINDS,
                     max_duration: int = 4) -> "FaultInjector":
-        """Seed-deterministic random plan: ``n_faults`` faults drawn over
-        ``horizon`` group steps against ``n_replicas`` replicas.  String
-        seeding keeps the draw stable across processes and platforms."""
+        """Seed-deterministic random plan: ``n_faults`` faults drawn
+        against ``n_replicas`` replicas.  With a ``horizon`` the steps
+        are uniform over ``[1, horizon]`` (finite runs); with
+        ``horizon=None`` they are drawn from a geometric-shaped
+        distribution with unbounded support (mean ~32 steps), so plans
+        compose with the serving tier's unbounded continuous-batching
+        loop — a step beyond whatever the run reaches simply never
+        fires.  String seeding keeps the draw stable across processes
+        and platforms."""
         rng = random.Random(f"fault-plan:{seed}")
-        plan = [FaultEvent(step=rng.randint(1, max(1, horizon)),
+        def draw_step() -> int:
+            if horizon is None:
+                return 1 + int(rng.expovariate(1.0 / 32.0))
+            return rng.randint(1, max(1, horizon))
+        plan = [FaultEvent(step=draw_step(),
                            replica=rng.randrange(n_replicas),
                            kind=kinds[rng.randrange(len(kinds))],
                            duration=rng.randint(1, max_duration))
@@ -121,7 +138,7 @@ class FaultInjector:
 
     def due(self, step: int) -> List[FaultEvent]:
         """Faults scheduled to fire at group step ``step`` (1-based)."""
-        return [f for f in self.plan if f.step == step]
+        return self._by_step.get(step, [])
 
 
 @dataclasses.dataclass

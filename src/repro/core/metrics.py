@@ -4,11 +4,145 @@
 
 where Q is the engine queue (slot) capacity, r_k the number of running
 requests during interval k, dt_k its duration, and T total elapsed time.
+
+Also hosts the serving tier's per-tenant accounting: each tenant gets a
+:class:`TenantStat` (arrival / shed / admitted / completed / consumed
+counters, token throughput, bubble attribution) whose queue-wait and
+end-to-end latency distributions are tracked by :class:`ReservoirQuantile`
+— a fixed-size streaming reservoir (Vitter's Algorithm R) with seeded,
+platform-stable sampling and no external dependencies.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+import math
+import random
+from typing import Dict, List, Optional, Tuple
+
+
+class ReservoirQuantile:
+    """Streaming quantile estimator over a fixed-size uniform reservoir.
+
+    Memory is bounded by ``size`` floats regardless of stream length.
+    Up to ``size`` observations the quantiles are exact; beyond that the
+    reservoir is a uniform sample (Algorithm R) and quantiles are
+    estimates.  Count, mean, min, and max stay exact forever.  The
+    replacement draw is seeded by a string, so the same stream produces
+    the same reservoir on every platform and process.
+    """
+
+    def __init__(self, size: int = 512, seed: "str | int" = 0):
+        assert size >= 1
+        self.size = size
+        self.count = 0
+        self.total = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+        self._items: List[float] = []
+        self._rng = random.Random(f"reservoir:{seed}")
+
+    def add(self, x: float) -> None:
+        x = float(x)
+        self.count += 1
+        self.total += x
+        self.min = min(self.min, x)
+        self.max = max(self.max, x)
+        if len(self._items) < self.size:
+            self._items.append(x)
+        else:
+            j = self._rng.randrange(self.count)
+            if j < self.size:
+                self._items[j] = x
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def quantile(self, q: float) -> float:
+        """Linear-interpolated quantile of the reservoir, q in [0, 1]."""
+        if not self._items:
+            return 0.0
+        xs = sorted(self._items)
+        pos = min(max(q, 0.0), 1.0) * (len(xs) - 1)
+        lo = int(pos)
+        hi = min(lo + 1, len(xs) - 1)
+        frac = pos - lo
+        return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+    def merge(self, other: "ReservoirQuantile") -> None:
+        """Fold another reservoir in (approximate beyond ``size``: the
+        merged reservoir is a seeded uniform subsample of the union)."""
+        self.count += other.count
+        self.total += other.total
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
+        items = self._items + other._items
+        if len(items) > self.size:
+            items = self._rng.sample(items, self.size)
+        self._items = items
+
+    def summary(self) -> dict:
+        return {
+            "count": self.count,
+            "mean": round(self.mean, 6),
+            "p50": round(self.quantile(0.50), 6),
+            "p95": round(self.quantile(0.95), 6),
+            "p99": round(self.quantile(0.99), 6),
+            "max": round(self.max, 6) if self.count else 0.0,
+        }
+
+
+def _wait_reservoir() -> ReservoirQuantile:
+    return ReservoirQuantile(seed="queue_wait")
+
+
+def _latency_reservoir() -> ReservoirQuantile:
+    return ReservoirQuantile(seed="latency")
+
+
+@dataclasses.dataclass
+class TenantStat:
+    """Per-tenant serving accounting (conservation:
+    ``arrivals == admitted + queued + shed`` at the ingress, and every
+    admitted request is eventually completed and consumed)."""
+    arrivals: int = 0               # requests delivered to the ingress
+    shed: int = 0                   # rejected (queue full / rate limit)
+    admitted: int = 0               # moved from tenant queue into the buffer
+    completed: int = 0              # finished decoding (eos / length)
+    consumed: int = 0               # fed to the trainer
+    tokens: int = 0                 # generated tokens kept
+    slo_misses: int = 0             # completions past their deadline
+    bubble_time: float = 0.0        # idle-slot time while this tenant queued
+    queue_wait: ReservoirQuantile = dataclasses.field(
+        default_factory=_wait_reservoir)
+    latency: ReservoirQuantile = dataclasses.field(
+        default_factory=_latency_reservoir)
+
+    def merge(self, other: "TenantStat") -> None:
+        self.arrivals += other.arrivals
+        self.shed += other.shed
+        self.admitted += other.admitted
+        self.completed += other.completed
+        self.consumed += other.consumed
+        self.tokens += other.tokens
+        self.slo_misses += other.slo_misses
+        self.bubble_time += other.bubble_time
+        self.queue_wait.merge(other.queue_wait)
+        self.latency.merge(other.latency)
+
+    def summary(self) -> dict:
+        return {
+            "arrivals": self.arrivals,
+            "shed": self.shed,
+            "admitted": self.admitted,
+            "completed": self.completed,
+            "consumed": self.consumed,
+            "tokens": self.tokens,
+            "slo_misses": self.slo_misses,
+            "bubble_time": round(self.bubble_time, 4),
+            "queue_wait": self.queue_wait.summary(),
+            "latency": self.latency.summary(),
+        }
 
 
 @dataclasses.dataclass
@@ -38,6 +172,15 @@ class RolloutMetrics:
     rerolled_entries: int = 0       # entries released for a re-roll (no
                                     # survivor could take them)
     scale_events: int = 0           # elastic scale_down + scale_up calls
+    # serving-tier per-tenant accounting (empty outside serving runs)
+    tenants: Dict[str, TenantStat] = dataclasses.field(default_factory=dict)
+
+    def tenant(self, name: str) -> TenantStat:
+        """Get-or-create the per-tenant stat record."""
+        st = self.tenants.get(name)
+        if st is None:
+            st = self.tenants[name] = TenantStat()
+        return st
 
     def record(self, running: int, dt: float, new_tokens: int = 0) -> None:
         if dt > 0:
@@ -120,9 +263,22 @@ class RolloutMetrics:
         self.replica_busy = max(self.replica_busy, other.replica_busy)
         self.replica_bubble_ratio = max(self.replica_bubble_ratio,
                                         other.replica_bubble_ratio)
+        for name, st in other.tenants.items():
+            self.tenant(name).merge(st)
+
+    def tenant_summary(self) -> Dict[str, dict]:
+        """Per-tenant record incl. throughput over this run's elapsed."""
+        T = self.elapsed
+        out = {}
+        for name in sorted(self.tenants):
+            rec = self.tenants[name].summary()
+            rec["throughput_tok_per_s"] = round(
+                self.tenants[name].tokens / T, 1) if T > 0 else 0.0
+            out[name] = rec
+        return out
 
     def summary(self) -> dict:
-        return {
+        out = {
             "elapsed": round(self.elapsed, 3),
             "bubble_ratio": round(self.bubble_ratio, 4),
             "throughput_tok_per_s": round(self.throughput, 1),
@@ -144,3 +300,8 @@ class RolloutMetrics:
             "replica_busy": round(self.replica_busy, 3),
             "replica_bubble_ratio": round(self.replica_bubble_ratio, 4),
         }
+        # only serving runs carry tenants — keep non-serving summaries
+        # (quickstart output, benchmark rows) byte-stable
+        if self.tenants:
+            out["tenants"] = self.tenant_summary()
+        return out

@@ -219,6 +219,20 @@ class RolloutOrchestrator:
 
     # -- one rollout iteration: decode until harvest -------------------------
 
+    def _harvest_stragglers(self) -> List[int]:
+        """Early-terminate every in-flight straggler and scavenge it back
+        to PENDING (on-policy discards its tokens, partial keeps them).
+        Shared by the epoch harvest below and the serving tier's
+        continuous-batching harvest.  Returns the interrupted uids."""
+        interrupted = self.engine.interrupt()
+        for uid in interrupted:
+            e = self.buffer.entries[uid]
+            if self.buffer.mode == Mode.ON_POLICY:
+                self.metrics.tokens_discarded += e.gen_len
+            self.buffer.scavenge(uid)
+        self.metrics.harvests += 1
+        return interrupted
+
     def rollout_until_harvest(self) -> None:
         threshold = min(self.cfg.resolved_threshold(),
                         len(self.buffer.unconsumed()))
@@ -234,13 +248,7 @@ class RolloutOrchestrator:
         if not self.policy.early_termination:
             return   # wait-for-all: the loop above drained the engine
         # early termination of stragglers (both modes; on-policy discards)
-        interrupted = self.engine.interrupt()
-        for uid in interrupted:
-            e = self.buffer.entries[uid]
-            if self.buffer.mode == Mode.ON_POLICY:
-                self.metrics.tokens_discarded += e.gen_len
-            self.buffer.scavenge(uid)
-        self.metrics.harvests += 1
+        self._harvest_stragglers()
 
     # -- training ------------------------------------------------------------
 

@@ -144,11 +144,66 @@ class BasePolicy:
         return True
 
 
+class DelegatingPolicy(BasePolicy):
+    """A policy wrapper: every hook forwards to a wrapped ``inner``
+    policy, and the contract flags mirror the inner policy's.
+
+    This is the extension point for layers that compose *with* any
+    scheduling strategy instead of replacing it — the serving tier's
+    admission controllers (``repro.serve.tenants.ServingPolicy``)
+    override only ``admit_next_group`` on top of this base, so fill /
+    harvest / training-order behaviour stays whatever the wrapped
+    strategy says.
+    """
+
+    name = "delegating"
+
+    def __init__(self, inner: SchedulerPolicy):
+        self.inner = inner
+        self.early_termination = inner.early_termination
+        self.strict_group_barrier = inner.strict_group_barrier
+        self.ordered_training = inner.ordered_training
+
+    def select_fill(self, pending, free_slots):
+        return self.inner.select_fill(pending, free_slots)
+
+    def harvest_now(self, view: SchedView) -> bool:
+        return self.inner.harvest_now(view)
+
+    def train_order_key(self, entry: BufferEntry):
+        return self.inner.train_order_key(entry)
+
+    def order_ready(self, ready, view: SchedView):
+        return self.inner.order_ready(ready, view)
+
+    def admit_next_group(self, view: SchedView) -> Optional[AdmitRequest]:
+        return self.inner.admit_next_group(view)
+
+    def update_gate(self, request: "UpdateRequest") -> bool:
+        return self.inner.update_gate(request)
+
+
 # ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
 
 _REGISTRY: Dict[str, Callable[..., SchedulerPolicy]] = {}
+
+# registry entries that live outside this module (they import it, so
+# they cannot be imported at module-init time without a cycle); loaded
+# on first registry use so `make_policy("serving")` works everywhere
+_EXTENSION_MODULES = ("repro.serve",)
+_extensions_loaded = False
+
+
+def _load_extensions() -> None:
+    global _extensions_loaded
+    if _extensions_loaded:
+        return
+    _extensions_loaded = True
+    import importlib
+    for mod in _EXTENSION_MODULES:
+        importlib.import_module(mod)
 
 
 def register_policy(name: str):
@@ -160,6 +215,7 @@ def register_policy(name: str):
 
 
 def make_policy(name: str, **kwargs) -> SchedulerPolicy:
+    _load_extensions()
     if name not in _REGISTRY:
         raise KeyError(f"unknown policy {name!r}; "
                        f"registered: {available_policies()}")
@@ -167,6 +223,7 @@ def make_policy(name: str, **kwargs) -> SchedulerPolicy:
 
 
 def available_policies() -> List[str]:
+    _load_extensions()
     return sorted(_REGISTRY)
 
 

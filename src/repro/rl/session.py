@@ -189,6 +189,21 @@ class SessionConfig:
     harvest_threshold: Optional[int] = None
     train_leftover: bool = True
     sim_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # always-on serving tier (repro.serve): setting `arrival` switches the
+    # session to continuous batching under a ServingOrchestrator — the
+    # configured scheduling policy is wrapped by the "serving" policy and
+    # prompts stream in through per-tenant admission-controlled queues
+    # instead of epoch groups.
+    tenants: Optional[List[Any]] = None    # TenantSpec | dict per tenant
+    arrival: Optional[Any] = None          # {"kind": "poisson"|"bursty",
+                                           #  "rates": {...}, ...} |
+                                           # {"kind": "trace", "trace": [...]}
+                                           # | a prebuilt arrival process
+    admission: str = "fifo"                # fifo|weighted_fair|slo_aware
+    serve_time: Optional[float] = None     # run_for sim-time bound
+    serve_arrivals: Optional[int] = None   # run_for arrival-count bound
+    serve_tick: Optional[float] = None     # serving-clock dt per step for
+                                           # wall-clock engines (slot)
 
 
 class RLSession:
@@ -275,7 +290,52 @@ class RLSession:
                                async_step=cfg.async_step,
                                drain_pack=cfg.drain_pack or None,
                                fault_injector=injector,
-                               elastic=cfg.elastic)
+                               elastic=cfg.elastic,
+                               spread_tenants=cfg.arrival is not None)
+
+        def make_orchestrator(engine, train_fn) -> RolloutOrchestrator:
+            """Epoch-driven orchestrator, or — when `arrival` is set —
+            the always-on serving tier: the configured policy wrapped by
+            the admission-controlled ServingPolicy over a streaming
+            ingress, driven by a ServingOrchestrator."""
+            if cfg.arrival is None:
+                return RolloutOrchestrator(engine, buffer, scfg, policy,
+                                           train_fn)
+            from repro.serve import (Ingress, ServingOrchestrator,
+                                     ServingPolicy, coerce_specs,
+                                     make_arrivals)
+            specs = coerce_specs(cfg.tenants if cfg.tenants
+                                 else [{"name": "default"}])
+            arrival = cfg.arrival
+            if isinstance(arrival, dict):
+                arrival = dict(arrival)
+                if arrival.get("kind", "poisson") != "trace":
+                    arrival.setdefault("seed", cfg.seed)
+                    arrival.setdefault("rates",
+                                       {s.name: 1.0 for s in specs})
+                    if "prompt_sampler" not in arrival:
+                        # serving prompts come from the task generator,
+                        # payload = the verifier meta (reward_fn unwraps
+                        # it from ServeMeta.payload)
+                        serve_gen = spec.make_generator(cfg.seed + 101)
+
+                        def task_sampler(rng, tenant):
+                            p, m = serve_gen.batch(1)
+                            return list(p[0]), m[0]
+                        arrival["prompt_sampler"] = task_sampler
+                arrival = make_arrivals(arrival)
+            ingress = Ingress(specs, arrival)
+            serving_policy = ServingPolicy(inner=policy,
+                                           admission=cfg.admission,
+                                           ingress=ingress)
+            tick = cfg.serve_tick
+            if tick is None and cfg.engine == "slot":
+                # wall-clock engine: a fixed per-step tick keeps every
+                # scheduling decision on the simulated clock
+                tick = 0.05
+            return ServingOrchestrator(engine, buffer, scfg,
+                                       serving_policy, train_fn,
+                                       ingress=ingress, tick=tick)
 
         if cfg.engine == "slot":
             model = build_model(tiny_lm_config(len(vocab), cfg.d_model,
@@ -288,7 +348,11 @@ class RLSession:
                                             steps=cfg.sft_steps,
                                             seed=cfg.seed,
                                             width=spec.sft_width)
-            reward_fn = (lambda toks, meta: spec.verify(toks, meta, vocab))
+            def reward_fn(toks, meta):
+                # serving requests carry their task meta in
+                # ServeMeta.payload; everything else passes through
+                meta = getattr(meta, "payload", meta)
+                return spec.verify(toks, meta, vocab)
             trainer = RLTrainer(model, params, reward_fn,
                                 loss_cfg=LossConfig(),
                                 opt_cfg=AdamWConfig(lr=cfg.lr),
@@ -320,8 +384,7 @@ class RLSession:
                     evals.append(ev)
                 return result
 
-            orch = RolloutOrchestrator(engine, buffer, scfg, policy,
-                                       train_fn)
+            orch = make_orchestrator(engine, train_fn)
             session = cls(cfg, orch, GroupedLoader(
                 gen, cfg.rollout_batch, cfg.group_size,
                 cfg.responses_per_prompt), vocab, model=model,
@@ -349,8 +412,7 @@ class RLSession:
                 sched_history.append(rec)
                 return UpdateResult(metrics=rec)
 
-            orch = RolloutOrchestrator(engine, buffer, scfg, policy,
-                                       train_fn)
+            orch = make_orchestrator(engine, train_fn)
             session = cls(cfg, orch, GroupedLoader(
                 gen, cfg.rollout_batch, cfg.group_size,
                 cfg.responses_per_prompt), vocab,
@@ -360,7 +422,9 @@ class RLSession:
                              "(expected 'slot' or 'sim')")
 
         # barrier-free policies stream prompts instead of taking groups
-        if hasattr(policy, "prompt_stream") and policy.prompt_stream is None:
+        # (under the serving tier prompts come from the ingress instead)
+        if (cfg.arrival is None and hasattr(policy, "prompt_stream")
+                and policy.prompt_stream is None):
             policy.prompt_stream = session.loader.stream()
         return session
 
@@ -372,7 +436,13 @@ class RLSession:
         cfg = self.cfg
         orch = self.orchestrator
         t0 = time.monotonic()
-        if hasattr(self.policy, "queue_group"):         # pipelined lookahead
+        if cfg.arrival is not None:                     # always-on serving
+            n_arr = cfg.serve_arrivals
+            if n_arr is None and cfg.serve_time is None:
+                # default bound: the epoch path's total prompt budget
+                n_arr = cfg.n_groups * self.loader.prompts_per_group
+            orch.run_for(sim_time=cfg.serve_time, n_arrivals=n_arr)
+        elif hasattr(self.policy, "queue_group"):       # pipelined lookahead
             for _ in range(cfg.n_groups):
                 prompts, metas = self.loader.next_group()
                 self.policy.queue_group(prompts, metas)
@@ -393,6 +463,8 @@ class RLSession:
             "rollout_metrics": orch.metrics.summary(),
             "wall_time_s": wall,
         }
+        if cfg.arrival is not None:
+            out["admission"] = cfg.admission
         if self.trainer is not None:
             out["sft_loss_final"] = (self.sft_losses[-1]
                                      if self.sft_losses else None)

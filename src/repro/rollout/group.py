@@ -133,6 +133,17 @@ from repro.core.buffer import BufferEntry
 from repro.core.engine_api import (EngineProtocol, FaultEvent, FaultInjector,
                                    SlotTable, StepEvent)
 
+def tenant_of(entry: BufferEntry) -> Optional[str]:
+    """The serving tier tags entries with a tenant through their meta
+    (``ServeMeta.tenant`` or a plain ``{"tenant": ...}`` dict); entries
+    outside the serving tier have none."""
+    meta = entry.meta
+    t = getattr(meta, "tenant", None)
+    if t is None and isinstance(meta, dict):
+        t = meta.get("tenant")
+    return t
+
+
 # -----------------------------------------------------------------------------
 # balancer registry
 # -----------------------------------------------------------------------------
@@ -275,7 +286,8 @@ class EngineGroup:
                  drain_pack: Optional[bool] = None,
                  migrate_kv: Optional[bool] = None,
                  fault_injector: Optional[FaultInjector] = None,
-                 elastic: bool = False):
+                 elastic: bool = False,
+                 spread_tenants: bool = False):
         assert replicas, "EngineGroup needs at least one replica"
         self.replicas = list(replicas)
         self.balancer = (make_balancer(balancer)
@@ -298,6 +310,13 @@ class EngineGroup:
         # busy time later — distorting every dt the orchestrator records.
         self._clock = max(r.clock for r in self.replicas)
         # routing state
+        # tenant-tagged routing (serving tier): when on, fresh entries of
+        # one tenant are spread across replicas so a bursty tenant cannot
+        # monopolise a single replica's slots (fate sharing / noisy
+        # neighbour isolation).  Off by default — RL workloads have no
+        # tenants and the extra key would be pure overhead.
+        self.spread_tenants = spread_tenants
+        self._tenant_by_uid: Dict[int, str] = {}
         self._home: Dict[int, int] = {}        # uid -> replica index
         self._est: Dict[int, float] = {}       # uid -> est remaining tokens
         self._gen_total: Dict[int, int] = {}   # uid -> generated incl prefix
@@ -447,8 +466,10 @@ class EngineGroup:
         return None
 
     def _pick_fresh(self, entry: BufferEntry, free: List[int],
-                    key_dest: Dict[Tuple[int, ...], int]) -> int:
-        """Prefix co-routing, then the balancer (no home affinity)."""
+                    key_dest: Dict[Tuple[int, ...], int],
+                    tenant_scratch: Optional[Dict] = None) -> int:
+        """Prefix co-routing, then tenant spreading (when enabled), then
+        the balancer (no home affinity)."""
         key = self._prefill_key(entry)
         if key:      # an empty prefix is never shared — don't co-route on it
             dest = key_dest.get(key)
@@ -456,10 +477,26 @@ class EngineGroup:
                 dest = self._resident_replica(key)
             if dest is not None and free[dest] > 0:
                 return dest
+        if self.spread_tenants:
+            t = tenant_of(entry)
+            if t is not None:
+                scratch = tenant_scratch or {}
+
+                def same(i: int) -> int:
+                    live = sum(1 for u in self.replicas[i].active_uids()
+                               if self._tenant_by_uid.get(u) == t)
+                    return live + scratch.get((i, t), 0)
+                # fewest same-tenant entries wins; the balancer's choice
+                # breaks ties, so within a tenant routing stays length- /
+                # load-aware
+                best = self.balancer(self, entry, free)
+                return min((i for i in range(len(free)) if free[i] > 0),
+                           key=lambda i: (same(i), i != best, i))
         return self.balancer(self, entry, free)
 
     def _route(self, entry: BufferEntry, free: List[int],
-               key_dest: Dict[Tuple[int, ...], int]) -> int:
+               key_dest: Dict[Tuple[int, ...], int],
+               tenant_scratch: Optional[Dict] = None) -> int:
         home = self._home.get(entry.uid)
         if home is not None and not self.alive[home]:
             # the home died after this record was written (kill/scale
@@ -469,11 +506,11 @@ class EngineGroup:
             self._home.pop(entry.uid, None)
             home = None
         if home is None:
-            return self._pick_fresh(entry, free, key_dest)
+            return self._pick_fresh(entry, free, key_dest, tenant_scratch)
         if free[home] > 0:
             return home
         self.steal_count += 1              # migrate: home replica is full
-        dest = self._pick_fresh(entry, free, key_dest)
+        dest = self._pick_fresh(entry, free, key_dest, tenant_scratch)
         if self.migrate_kv and self._migrate(entry.uid, home, dest):
             # the entry lands on the thief with its KV resident: the
             # destination's submit path resumes it with zero re-prefill
@@ -499,6 +536,7 @@ class EngineGroup:
         assert len(entries) <= sum(free), "not enough free slots"
         batches: List[List[BufferEntry]] = [[] for _ in self.replicas]
         key_dest: Dict[Tuple[int, ...], int] = {}
+        tenant_scratch: Dict = {}   # (replica, tenant) -> in-batch count
         # two passes: home-affine (previously-seen) entries claim their
         # home slots FIRST, so a fresh entry earlier in the caller's
         # order cannot take the last free slot of a resumable entry's
@@ -507,12 +545,16 @@ class EngineGroup:
                        key=lambda j: entries[j].uid not in self._home)
         for j in order:
             e = entries[j]
-            i = self._route(e, free, key_dest)
+            i = self._route(e, free, key_dest, tenant_scratch)
             assert free[i] > 0, (i, free)
             free[i] -= 1
             key = self._prefill_key(e)
             if key:
                 key_dest.setdefault(key, i)
+            t = tenant_of(e)
+            if t is not None:
+                self._tenant_by_uid[e.uid] = t
+                tenant_scratch[(i, t)] = tenant_scratch.get((i, t), 0) + 1
             batches[i].append(e)
             # account the assignment NOW so the balancer sees in-batch
             # routing decisions, not just the pre-submit loads
@@ -521,6 +563,14 @@ class EngineGroup:
             self._est[e.uid] = est
             self._gen_total[e.uid] = e.gen_len
             self.load[i] += est
+        cap = HOME_RETENTION_FACTOR * max(1, self.capacity)
+        if len(self._tenant_by_uid) > cap:
+            # bound the tag map (mirrors _remember_home): tags of consumed
+            # uids must not leak one record per request forever
+            live = set(self.active_uids()) | set(self._home)
+            live.update(e.uid for e in entries)
+            self._tenant_by_uid = {u: t for u, t in self._tenant_by_uid.items()
+                                   if u in live}
         dt_group = 0.0
         for i, batch in enumerate(batches):
             if batch:
@@ -919,6 +969,28 @@ class EngineGroup:
         if self._stepped_time <= 0:
             return 0.0
         return self._busy_replicas_time / self._stepped_time
+
+    def tenant_counts(self) -> List[Dict[str, int]]:
+        """Per-replica active-entry count by tenant (serving-tier
+        observability; empty dicts outside serving runs).  Dead replicas
+        report empty — they are fenced and hold nothing."""
+        out: List[Dict[str, int]] = []
+        for i, r in enumerate(self.replicas):
+            d: Dict[str, int] = {}
+            if self.alive[i]:
+                for u in r.active_uids():
+                    t = self._tenant_by_uid.get(u)
+                    if t is not None:
+                        d[t] = d.get(t, 0) + 1
+            out.append(d)
+        # opportunistic prune: tags of long-gone uids must not grow the
+        # map forever in an unbounded serving run
+        cap = HOME_RETENTION_FACTOR * max(1, self.capacity)
+        if len(self._tenant_by_uid) > cap:
+            live = set(self.active_uids()) | set(self._home)
+            self._tenant_by_uid = {u: t for u, t in self._tenant_by_uid.items()
+                                   if u in live}
+        return out
 
     def replica_stats(self) -> List[Dict[str, float]]:
         """Per-replica detail behind the aggregated ``cache_stats()``."""

@@ -1,0 +1,487 @@
+"""Serving-conformance suite: the executable contract of the always-on
+serving tier (repro.serve).
+
+Every (admission policy x scheduler policy) pair is driven through the
+:class:`ServingOrchestrator` against both engine backends (SimEngine's
+virtual clock and the real-decode SlotEngine under ``tick`` time) and a
+``num_replicas in {1, 2, 4}`` EngineGroup sweep, so a new admission
+registry entry inherits the whole contract:
+
+  * per-tenant conservation — at teardown every tenant satisfies
+    ``arrivals == completed + shed`` and ``admitted == completed ==
+    consumed``; nothing is lost, duplicated, or silently dropped;
+  * continuous-batching invariants — the buffer never advances a group
+    epoch, ends empty, and the engine ends drained, on an unbounded
+    arrival stream with no epoch boundary;
+  * determinism — two same-seed runs produce byte-identical per-tenant
+    event logs (all time comes from the simulated clock);
+  * no-starvation under ``weighted_fair`` and deadline-honouring under
+    ``slo_aware``, both as unit tests on the admission controllers and
+    as end-to-end comparisons on a shared recorded trace;
+  * fault composition — kill/stall plans (including horizon-free random
+    plans) compose with the unbounded serving loop without losing
+    conservation.
+
+Any new admission policy must pass this file UNCHANGED (same bar as
+``policy_conformance`` for scheduling policies).
+"""
+import pytest
+
+from policy_conformance import CAPACITY, ENGINE_FACTORIES, MAX_GEN
+from proptest import cases, integers, sampled_from
+from repro.core.buffer import Mode, StatefulRolloutBuffer
+from repro.core.engine_api import FaultEvent, FaultInjector
+from repro.core.orchestrator import SortedRLConfig, UpdateRequest
+from repro.core.policy import available_policies, make_policy
+from repro.rollout.group import EngineGroup
+from repro.rollout.sim import SimEngine, lognormal_lengths
+from repro.serve import (BurstyArrivals, Ingress, PoissonArrivals,
+                         QueuedRequest, ServingOrchestrator, ServingPolicy,
+                         TenantQueue, TenantSpec, TraceArrivals,
+                         available_admissions, make_admission, record_trace)
+
+N_ARRIVALS = 16
+SEED = 7
+
+# the shared 2-tenant contract workload: a weighted batch tenant and a
+# latency-sensitive interactive tenant with an SLO
+TENANTS = (TenantSpec("batch", weight=1.0),
+           TenantSpec("interactive", weight=4.0, latency_slo=2.0))
+RATES = {"batch": 40.0, "interactive": 20.0}
+
+# the full (admission x scheduler) cube runs on these: both engine
+# backends plus the num_replicas {1, 2, 4} sweep (policy_conformance's
+# factories, so the serving tier is tested on the exact same fleets)
+MATRIX_ENGINES = ("sim", "slot", "group1_sim", "group2_sim", "group4_sim")
+# PR-5 tail machinery + real-decode replicas: swept against every
+# admission policy with the default scheduler
+TAIL_ENGINES = ("group4_sim_async", "group2_sim_pack", "group2_slot")
+
+# every registered scheduling policy composes with every admission
+# policy ("serving" itself excluded: wrapping the wrapper is a no-op)
+INNER_POLICIES = tuple(n for n in available_policies() if n != "serving")
+
+
+def vocab_prompts(rng, tenant):
+    # valid tiny-model vocab (the slot engines decode these for real)
+    return [1, 1, 1, 2 + rng.randrange(5)]
+
+
+def build(admission, inner, engine_name, tenants=TENANTS, process=None,
+          seed=SEED):
+    eng = ENGINE_FACTORIES[engine_name]()
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    cfg = SortedRLConfig(mode=Mode.PARTIAL, rollout_batch=CAPACITY,
+                         group_size=1, update_batch=CAPACITY,
+                         max_gen_len=MAX_GEN)
+    if process is None:
+        process = PoissonArrivals(RATES, seed=seed,
+                                  prompt_sampler=vocab_prompts)
+    ingress = Ingress(tenants, process)
+    policy = ServingPolicy(inner=inner, admission=admission, ingress=ingress)
+    batches = []
+
+    def train_fn(req: UpdateRequest):
+        batches.append((list(req.entries), req.group_epoch))
+
+    # wall-clock engines get a fixed-tick serving clock; virtual-clock
+    # engines serve on the engine clock itself
+    tick = 0.05 if "slot" in engine_name else None
+    orch = ServingOrchestrator(eng, buf, cfg, policy, train_fn, tick=tick)
+    return orch, batches
+
+
+_DRIVE_CACHE = {}
+
+
+def drive(admission, inner, engine_name, n_arrivals=N_ARRIVALS):
+    """Serve `n_arrivals` arrival events to completion (memoized — the
+    run is deterministic and the invariant tests only read)."""
+    key = (admission, inner, engine_name, n_arrivals)
+    if key not in _DRIVE_CACHE:
+        orch, batches = build(admission, inner, engine_name)
+        orch.run_for(n_arrivals=n_arrivals)
+        _DRIVE_CACHE[key] = (orch, batches)
+    return _DRIVE_CACHE[key]
+
+
+@pytest.fixture(params=sorted(available_admissions()))
+def admission_name(request):
+    return request.param
+
+
+@pytest.fixture(params=INNER_POLICIES)
+def inner_name(request):
+    return request.param
+
+
+@pytest.fixture(params=MATRIX_ENGINES)
+def engine_name(request):
+    return request.param
+
+
+# -- registry surface ---------------------------------------------------------
+
+def test_admission_registry_contract():
+    names = available_admissions()
+    for required in ("fifo", "weighted_fair", "slo_aware"):
+        assert required in names
+    for name in names:
+        a = make_admission(name)
+        assert callable(getattr(a, "select", None))
+    with pytest.raises(KeyError):
+        make_admission("no_such_admission")
+    # the serving policy is a first-class registry citizen
+    assert "serving" in available_policies()
+    assert make_policy("serving").name == "serving"
+
+
+# -- the contract: every (admission x scheduler) pair, every fleet ------------
+
+def _assert_conserved(orch, batches):
+    ing = orch.ingress
+    total_completed = 0
+    for name in ing.specs:
+        st = orch.metrics.tenants.get(name)
+        q = ing.queues[name]
+        assert len(q) == 0, f"tenant {name}: requests left queued"
+        if st is None:
+            continue        # tenant saw no arrivals in this window
+        assert st.arrivals == st.completed + st.shed, \
+            f"tenant {name}: lost requests " \
+            f"({st.arrivals} != {st.completed} + {st.shed})"
+        assert st.admitted == st.completed == st.consumed, \
+            f"tenant {name}: admitted/completed/consumed diverge"
+        assert q.admitted == st.admitted
+        total_completed += st.completed
+    # event-log balance: the authoritative ingress log tells the same story
+    kinds = {}
+    for _, kind, _, _ in ing.events:
+        kinds[kind] = kinds.get(kind, 0) + 1
+    assert kinds.get("arrive", 0) == kinds.get("admit", 0) + kinds.get("shed", 0)
+    assert kinds.get("done", 0) == kinds.get("admit", 0)
+    # trained exactly once
+    uids = [e.uid for b, _ in batches for e in b]
+    assert len(uids) == len(set(uids)), "an entry trained twice"
+    if orch.metrics.updates_gated == 0:
+        assert len(uids) == total_completed
+
+
+def _assert_continuous(orch):
+    assert orch.buffer.group_epoch == 0, \
+        "continuous batching must never advance a group epoch"
+    assert not orch.buffer.entries, "buffer must end empty (bounded memory)"
+    orch.buffer.check_invariants()
+    assert orch.engine.free_slots() == orch.engine.capacity
+    assert orch.ingress.drained()
+
+
+def test_tenant_conservation(admission_name, inner_name, engine_name):
+    orch, batches = drive(admission_name, inner_name, engine_name)
+    _assert_conserved(orch, batches)
+
+
+def test_continuous_batching_invariants(admission_name, inner_name,
+                                        engine_name):
+    orch, _ = drive(admission_name, inner_name, engine_name)
+    _assert_continuous(orch)
+
+
+def test_curriculum_composes(admission_name, inner_name, engine_name):
+    # admission controls WHO enters; training order stays the wrapped
+    # scheduler's contract
+    orch, batches = drive(admission_name, inner_name, engine_name)
+    policy = orch.policy
+    if not policy.ordered_training:
+        return
+    for b, _ in batches:
+        keys = [policy.train_order_key(e) for e in b]
+        assert keys == sorted(keys), \
+            f"batch not monotone in train_order_key: {keys}"
+
+
+def test_tail_machinery(admission_name):
+    # async stepping, drain-phase packing, migration, real-decode replicas
+    for engine_name in TAIL_ENGINES:
+        orch, batches = drive(admission_name, "sorted", engine_name)
+        _assert_conserved(orch, batches)
+        _assert_continuous(orch)
+
+
+# -- determinism (all time from the simulated clock + seed) -------------------
+
+@pytest.mark.parametrize("engine_name2", ["sim", "group2_sim", "slot"])
+def test_same_seed_identical_event_logs(engine_name2):
+    def run():
+        orch, _ = build("weighted_fair", "sorted", engine_name2)
+        orch.run_for(n_arrivals=N_ARRIVALS)
+        return orch
+    a, b = run(), run()
+    assert a.ingress.events == b.ingress.events, \
+        "same-seed runs must produce identical per-tenant event logs"
+    # scheduling state is fully deterministic; only wall-clock-derived
+    # rates (throughput, bubble attribution) may differ on a real engine
+    def scrub(summary):
+        return {t: {k: v for k, v in rec.items()
+                    if k not in ("throughput_tok_per_s", "bubble_time")}
+                for t, rec in summary.items()}
+    assert scrub(a.metrics.tenant_summary()) \
+        == scrub(b.metrics.tenant_summary())
+
+
+def test_trace_replay_identity():
+    # a recorded trace replays to the exact same serving run
+    proc = PoissonArrivals(RATES, seed=SEED, prompt_sampler=vocab_prompts)
+    trace = record_trace(proc, N_ARRIVALS)
+    live, _ = build("fifo", "sorted", "sim")
+    live.run_for(n_arrivals=N_ARRIVALS)
+    replay, _ = build("fifo", "sorted", "sim",
+                      process=TraceArrivals(trace))
+    replay.run_for(n_arrivals=N_ARRIVALS)
+    assert live.ingress.events == replay.ingress.events
+
+
+def test_record_trace_roundtrip():
+    proc = PoissonArrivals(RATES, seed=3)
+    trace = record_trace(proc, 10)
+    assert len(trace) == 10
+    again = record_trace(TraceArrivals(trace), 10)
+    assert again == sorted(trace)       # replay is time-ordered
+
+
+# -- admission-controller unit contracts --------------------------------------
+
+def _backlogged(spec, n, t0=0.0, dt=0.01, seq0=0):
+    q = TenantQueue(spec)
+    for i in range(n):
+        q.offer(QueuedRequest(seq=seq0 + i, tenant=spec.name, prompt=[1],
+                              t_arrival=t0 + i * dt,
+                              deadline=(t0 + i * dt + spec.latency_slo
+                                        if spec.latency_slo else None)),
+                now=t0 + i * dt)
+    return q
+
+
+def test_fifo_is_global_arrival_order():
+    qs = {"a": _backlogged(TenantSpec("a"), 3, t0=0.0, seq0=0),
+          "b": _backlogged(TenantSpec("b"), 3, t0=0.005, seq0=100)}
+    picked = make_admission("fifo").select(qs, 6, now=1.0)
+    assert [p.t_arrival for p in picked] == sorted(p.t_arrival for p in picked)
+
+
+def test_weighted_fair_proportional_shares():
+    # deficit round robin: long-run admission shares match the weights
+    qs = {"a": _backlogged(TenantSpec("a", weight=3.0), 40, seq0=0),
+          "b": _backlogged(TenantSpec("b", weight=1.0), 40, seq0=100)}
+    picked = make_admission("weighted_fair").select(qs, 16, now=1.0)
+    by = {"a": 0, "b": 0}
+    for p in picked:
+        by[p.tenant] += 1
+    assert by == {"a": 12, "b": 4}
+
+
+def test_weighted_fair_never_starves():
+    # fractional weight: the light tenant banks credit every visit and is
+    # admitted within ceil(1/weight) rounds — bounded starvation
+    qs = {"heavy": _backlogged(TenantSpec("heavy", weight=8.0), 500, seq0=0),
+          "light": _backlogged(TenantSpec("light", weight=0.25), 500,
+                               seq0=10_000)}
+    adm = make_admission("weighted_fair")
+    first_light = None
+    light = 0
+    for call in range(64):
+        for p in adm.select(qs, 1, now=1.0):
+            if p.tenant == "light":
+                light += 1
+                if first_light is None:
+                    first_light = call
+    assert light >= 1, "weighted_fair starved the light tenant"
+    assert first_light is not None and first_light <= 8
+    assert light < 64 - light, "weights were ignored"
+
+
+def test_slo_aware_is_deadline_order():
+    specs = {"fast": TenantSpec("fast", latency_slo=1.0),
+             "slow": TenantSpec("slow", latency_slo=5.0),
+             "none": TenantSpec("none")}
+    # "none" arrived FIRST — fifo would pick it; EDF must not
+    qs = {"none": _backlogged(specs["none"], 2, t0=0.0, seq0=200),
+          "slow": _backlogged(specs["slow"], 2, t0=0.1, seq0=100),
+          "fast": _backlogged(specs["fast"], 2, t0=0.2, seq0=0)}
+    picked = make_admission("slo_aware").select(qs, 6, now=1.0)
+    assert [p.tenant for p in picked] == ["fast", "fast", "slow", "slow",
+                                         "none", "none"]
+    fifo = make_admission("fifo").select(
+        {"none": _backlogged(specs["none"], 1, t0=0.0),
+         "fast": _backlogged(specs["fast"], 1, t0=0.2)}, 1, now=1.0)
+    assert fifo[0].tenant == "none"
+
+
+# -- end-to-end policy comparisons on a shared recorded trace -----------------
+
+SLO_TENANTS = (TenantSpec("batch", weight=1.0, queue_capacity=256),
+               TenantSpec("interactive", weight=8.0, latency_slo=0.5,
+                          queue_capacity=256))
+
+
+def _slo_trace(n=120, seed=11):
+    # a batch tenant flooding in bursts over a low-rate interactive tenant
+    proc = BurstyArrivals({"batch": 300.0, "interactive": 10.0}, seed=seed,
+                          on_time=0.3, off_time=0.7)
+    return record_trace(proc, n)
+
+
+def _replay(admission, trace, tenants=SLO_TENANTS):
+    orch, _ = build(admission, "sorted", "sim", tenants=tenants,
+                    process=TraceArrivals(trace))
+    orch.run_for(n_arrivals=len(trace))
+    return orch.metrics.tenant_summary()
+
+
+def test_slo_admission_honors_deadlines_end_to_end():
+    """On the IDENTICAL bursty trace, slo_aware keeps the interactive
+    tenant's tail latency strictly below fifo's (the deadline-blind
+    baseline makes interactive wait behind the batch flood)."""
+    trace = _slo_trace()
+    fifo = _replay("fifo", trace)
+    slo = _replay("slo_aware", trace)
+    # same workload on both sides
+    assert fifo["interactive"]["arrivals"] == slo["interactive"]["arrivals"]
+    assert slo["interactive"]["latency"]["p99"] \
+        < fifo["interactive"]["latency"]["p99"]
+    assert slo["interactive"]["slo_misses"] <= fifo["interactive"]["slo_misses"]
+
+
+def test_weighted_fair_no_starvation_end_to_end():
+    # the weighted tenant's queueing delay drops vs the tenant-blind
+    # baseline when a heavy tenant floods
+    trace = _slo_trace()
+    fifo = _replay("fifo", trace)
+    wf = _replay("weighted_fair", trace)
+    assert wf["interactive"]["queue_wait"]["p95"] \
+        < fifo["interactive"]["queue_wait"]["p95"]
+    # and the batch tenant still progresses (no lockout)
+    assert wf["batch"]["completed"] == wf["batch"]["arrivals"] \
+        - wf["batch"]["shed"]
+
+
+# -- faults: plans compose with the unbounded serving loop --------------------
+
+def _fleet(fault_injector=None, capacity_each=2, seeds=(0, 1)):
+    return EngineGroup(
+        [SimEngine(capacity=capacity_each, max_gen_len=MAX_GEN, seed=s,
+                   kv_residency=True,
+                   length_sampler=lognormal_lengths(median=3, sigma=0.8,
+                                                    max_len=MAX_GEN))
+         for s in seeds],
+        migrate_kv=True, fault_injector=fault_injector)
+
+
+def _serve_fleet(eng, admission="fifo", tenants=TENANTS, process=None,
+                 n_arrivals=N_ARRIVALS, seed=SEED):
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    cfg = SortedRLConfig(mode=Mode.PARTIAL, rollout_batch=CAPACITY,
+                         group_size=1, update_batch=CAPACITY,
+                         max_gen_len=MAX_GEN)
+    if process is None:
+        process = PoissonArrivals(RATES, seed=seed,
+                                  prompt_sampler=vocab_prompts)
+    ingress = Ingress(tenants, process)
+    policy = ServingPolicy(inner="sorted", admission=admission,
+                           ingress=ingress)
+    batches = []
+    orch = ServingOrchestrator(eng, buf, cfg, policy,
+                               lambda req: batches.append(req), tick=None)
+    orch.run_for(n_arrivals=n_arrivals)
+    return orch, batches
+
+
+@pytest.mark.chaos
+def test_kill_mid_stream_conserves():
+    """A replica killed mid-stream with tenants in flight: the survivors
+    absorb the re-homed work and every tenant still conserves."""
+    eng = _fleet(FaultInjector([FaultEvent(step=3, replica=0, kind="kill")]))
+    orch, batches = _serve_fleet(eng)
+    assert orch.metrics.replica_deaths == 1
+    trained = [e.uid for req in batches for e in req.entries]
+    assert len(trained) == len(set(trained))
+    _assert_conserved(orch, [(req.entries, req.group_epoch)
+                             for req in batches])
+    _assert_continuous(orch)
+
+
+@pytest.mark.chaos
+def test_fault_plan_without_horizon():
+    # horizon-free plans: steps have unbounded support, same seed gives
+    # the same plan, and due() beyond any step is a cheap no-op
+    a = FaultInjector.random_plan(seed=7, n_replicas=2, horizon=None,
+                                  n_faults=3)
+    b = FaultInjector.random_plan(seed=7, n_replicas=2, horizon=None,
+                                  n_faults=3)
+    assert [(f.step, f.replica, f.kind) for f in a.plan] \
+        == [(f.step, f.replica, f.kind) for f in b.plan]
+    assert all(f.step >= 1 for f in a.plan)
+    assert a.due(10 ** 9) == []
+    c = FaultInjector.random_plan(seed=8, n_replicas=2, horizon=None,
+                                  n_faults=3)
+    assert [(f.step, f.replica) for f in c.plan] \
+        != [(f.step, f.replica) for f in a.plan]
+
+
+@pytest.mark.chaos
+def test_stall_plan_composes_with_serving():
+    # a stalled replica parks mid-stream, resumes, and the loop neither
+    # wedges nor loses work — no horizon anywhere
+    eng = _fleet(FaultInjector([FaultEvent(step=2, replica=0, kind="stall",
+                                           duration=3),
+                                FaultEvent(step=9, replica=1, kind="stall",
+                                           duration=2)]))
+    orch, batches = _serve_fleet(eng)
+    _assert_conserved(orch, [(req.entries, req.group_epoch)
+                             for req in batches])
+    _assert_continuous(orch)
+
+
+# -- proptest: random interleavings on a 2-tenant, 2-replica fleet ------------
+
+@pytest.mark.chaos
+@cases(max_examples=15, _seed=5,
+       seed=integers(0, 10_000),
+       admission=sampled_from(["fifo", "weighted_fair", "slo_aware"]),
+       cap=integers(1, 6),
+       n_arr=integers(5, 40),
+       rate_limit=sampled_from([None, 3.0, 15.0]),
+       fault_kind=sampled_from([None, "kill", "stall"]),
+       fault_step=integers(1, 30))
+def test_random_interleavings_conserve(seed, admission, cap, n_arr,
+                                       rate_limit, fault_kind, fault_step):
+    """Random arrivals x admission x bounded queues x rate limits x
+    faults: per-tenant conservation, bounded queue depth, and zero leaks
+    at teardown.  Faults target replica 0 only, so the fleet always
+    retains capacity and the stream must fully drain."""
+    tenants = (TenantSpec("a", weight=2.0, queue_capacity=cap,
+                          rate_limit=rate_limit),
+               TenantSpec("b", weight=1.0, latency_slo=1.0,
+                          queue_capacity=cap))
+    inj = None
+    if fault_kind is not None:
+        inj = FaultInjector([FaultEvent(step=fault_step, replica=0,
+                                        kind=fault_kind, duration=2)])
+    eng = _fleet(inj, seeds=(seed % 100, seed % 100 + 1))
+    process = PoissonArrivals({"a": 30.0, "b": 10.0}, seed=seed,
+                              prompt_sampler=vocab_prompts)
+    orch, batches = _serve_fleet(eng, admission=admission, tenants=tenants,
+                                 process=process, n_arrivals=n_arr)
+    ing = orch.ingress
+    for name in ("a", "b"):
+        st = orch.metrics.tenants.get(name)
+        q = ing.queues[name]
+        assert q.depth_peak <= cap, "bounded queue exceeded its capacity"
+        assert len(q) == 0
+        if st is not None:
+            assert st.arrivals == st.completed + st.shed
+            assert st.admitted == st.completed == st.consumed
+    assert not orch.buffer.entries, "leaked buffer entries at teardown"
+    assert not orch.engine.active_uids(), "leaked engine slots at teardown"
+    uids = [e.uid for req in batches for e in req.entries]
+    assert len(uids) == len(set(uids))

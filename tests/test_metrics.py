@@ -1,0 +1,137 @@
+"""Unit tests for the streaming quantile helper and per-tenant metrics
+(repro.core.metrics.ReservoirQuantile / TenantStat)."""
+import random
+
+import pytest
+
+from repro.core.metrics import ReservoirQuantile, RolloutMetrics, TenantStat
+
+
+# -- ReservoirQuantile --------------------------------------------------------
+
+def test_empty_reservoir():
+    r = ReservoirQuantile()
+    assert r.count == 0
+    assert r.mean == 0.0
+    assert r.quantile(0.5) == 0.0
+    assert r.summary()["max"] == 0.0
+
+
+def test_exact_below_size():
+    r = ReservoirQuantile(size=128)
+    xs = list(range(100))
+    for x in xs:
+        r.add(x)
+    assert r.count == 100
+    assert r.min == 0 and r.max == 99
+    assert r.mean == pytest.approx(49.5)
+    # quantiles are exact (linear interpolation over the full data)
+    assert r.quantile(0.0) == 0
+    assert r.quantile(1.0) == 99
+    assert r.quantile(0.5) == pytest.approx(49.5)
+
+
+def test_bounded_memory_and_estimation():
+    r = ReservoirQuantile(size=256, seed="t")
+    rng = random.Random(1)
+    for _ in range(20_000):
+        r.add(rng.uniform(0, 100))
+    assert len(r._items) == 256          # memory bound holds
+    assert r.count == 20_000             # exact counters keep counting
+    # a uniform[0,100] stream: the sampled median is near 50
+    assert 35 < r.quantile(0.5) < 65
+
+
+def test_deterministic_across_instances():
+    def fill():
+        r = ReservoirQuantile(size=64, seed="det")
+        for i in range(5_000):
+            r.add((i * 37) % 1000)
+        return r
+    a, b = fill(), fill()
+    assert a._items == b._items
+    assert a.summary() == b.summary()
+
+
+def test_merge_exact_when_small():
+    a = ReservoirQuantile(size=128)
+    b = ReservoirQuantile(size=128)
+    for i in range(40):
+        a.add(i)
+    for i in range(40, 80):
+        b.add(i)
+    a.merge(b)
+    assert a.count == 80
+    assert a.min == 0 and a.max == 79
+    assert a.quantile(0.5) == pytest.approx(39.5)
+
+
+def test_merge_stays_bounded():
+    a = ReservoirQuantile(size=32, seed="m")
+    b = ReservoirQuantile(size=32, seed="m2")
+    for i in range(100):
+        a.add(i)
+        b.add(1000 + i)
+    a.merge(b)
+    assert len(a._items) <= 32
+    assert a.count == 200
+    assert a.max == 1099
+
+
+def test_summary_shape():
+    r = ReservoirQuantile()
+    r.add(1.0)
+    r.add(3.0)
+    s = r.summary()
+    assert set(s) == {"count", "mean", "p50", "p95", "p99", "max"}
+    assert s["count"] == 2
+    assert s["p50"] == pytest.approx(2.0)
+
+
+# -- TenantStat / RolloutMetrics ---------------------------------------------
+
+def test_tenant_get_or_create():
+    m = RolloutMetrics(capacity=4)
+    st = m.tenant("a")
+    st.arrivals += 3
+    assert m.tenant("a").arrivals == 3
+    assert set(m.tenants) == {"a"}
+
+
+def test_tenant_merge():
+    x, y = TenantStat(), TenantStat()
+    x.arrivals, x.completed = 5, 4
+    y.arrivals, y.shed = 2, 1
+    x.latency.add(1.0)
+    y.latency.add(3.0)
+    x.merge(y)
+    assert x.arrivals == 7 and x.completed == 4 and x.shed == 1
+    assert x.latency.count == 2
+    assert x.latency.quantile(0.5) == pytest.approx(2.0)
+
+
+def test_metrics_merge_folds_tenants():
+    a = RolloutMetrics(capacity=4)
+    b = RolloutMetrics(capacity=4)
+    a.tenant("t1").tokens = 10
+    b.tenant("t1").tokens = 5
+    b.tenant("t2").tokens = 7
+    a.merge(b)
+    assert a.tenant("t1").tokens == 15
+    assert a.tenant("t2").tokens == 7
+
+
+def test_summary_omits_tenants_when_empty():
+    m = RolloutMetrics(capacity=4)
+    assert "tenants" not in m.summary()   # non-serving output is unchanged
+    m.tenant("a").arrivals = 1
+    s = m.summary()
+    assert "tenants" in s and "a" in s["tenants"]
+
+
+def test_tenant_summary_throughput():
+    m = RolloutMetrics(capacity=4)
+    m.record(running=4, dt=2.0, new_tokens=8)
+    m.tenant("a").tokens = 8
+    rec = m.tenant_summary()["a"]
+    assert rec["throughput_tok_per_s"] == pytest.approx(4.0)
