@@ -43,6 +43,10 @@ REQUIRED_SMOKE_ROWS = (
     "replicas/r1", "replicas/r2", "replicas/r4", "replicas/r4_rr",
     "replicas/r4_async", "replicas/r4_pack",
     "replicas/r4_kill1", "replicas/r3_hetero",
+    # rollout/update overlap acceptance pin: overlapped wall-clock
+    # strictly below serialized on the identical workload, with a
+    # positive overlap fraction (asserted inside bench_overlap)
+    "overlap/fig1a_serial", "overlap/fig1a_stream",
     # the serving tier's acceptance pin: slo_aware p99 strictly below
     # fifo on the shared bursty trace (asserted inside bench_serving)
     "serving/poisson_2tenant", "serving/bursty_slo",

@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   policy_sweep/*      every registered SchedulerPolicy, by name
   prefix_share/*      paged-KV-cache GRPO prefix sharing + resume rows
   replicas/*          EngineGroup data-parallel rollout: bubble vs replicas
+  overlap/*           rollout/update overlap: serialized vs streaming trainer
   serving/*           always-on serving tier: multi-tenant admission rows
   fig3_logic_rl/*     real RL token-efficiency on K&K (Fig. 3, quick mode)
   roofline_table/*    per (arch x shape) roofline terms (§Roofline)
@@ -95,8 +96,8 @@ def json_path_from_argv(argv) -> str:
 
 def main() -> None:
     from benchmarks import (bench_ablation, bench_breakdown, bench_logic_rl,
-                            bench_prefix_share, bench_replicas, bench_serving,
-                            bench_throughput, roofline)
+                            bench_overlap, bench_prefix_share, bench_replicas,
+                            bench_serving, bench_throughput, roofline)
     json_path = json_path_from_argv(sys.argv)
     smoke = "--smoke" in sys.argv
     if smoke:
@@ -108,6 +109,7 @@ def main() -> None:
                     ("prefix_share",
                      lambda: bench_prefix_share.main(smoke=True)),
                     ("replicas", lambda: bench_replicas.main(smoke=True)),
+                    ("overlap", lambda: bench_overlap.main(smoke=True)),
                     ("serving", lambda: bench_serving.main(smoke=True)),
                     ("quickstart", lambda: [quickstart_smoke_row()]))
     else:
@@ -116,6 +118,7 @@ def main() -> None:
                     ("ablation", bench_ablation.main),
                     ("prefix_share", bench_prefix_share.main),
                     ("replicas", bench_replicas.main),
+                    ("overlap", bench_overlap.main),
                     ("serving", bench_serving.main),
                     ("quickstart", lambda: [quickstart_smoke_row()]),
                     ("roofline", roofline.main))

@@ -17,7 +17,73 @@ from __future__ import annotations
 import dataclasses
 import math
 import random
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class MetricsSnapshot:
+    """One typed observability record, shared across tiers.
+
+    The orchestrator (``RolloutMetrics.snapshot``), the EngineGroup
+    (``cache_stats`` / ``replica_stats``) and the serving tier
+    (``ServingOrchestrator.snapshot``) all used to emit ad-hoc duck-typed
+    dicts; this unifies them: a ``source`` tag, one flat ordered scalar
+    map, and optional nested child records.  ``to_dict()`` is the stable
+    wire format benchmarks and ``compare.py`` consume.
+
+    The read-only Mapping surface (``get`` / ``[]`` / ``in`` / ``keys`` /
+    iteration / truthiness) covers the flat scalars, so every legacy
+    caller that indexed these records as plain dicts — including
+    ``dict.update(snapshot)`` and ``RolloutMetrics.record_cache`` — keeps
+    working unchanged.
+    """
+    source: str
+    values: Dict[str, float] = dataclasses.field(default_factory=dict)
+    children: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    # -- read-only Mapping over the flat scalars ----------------------------
+
+    def __getitem__(self, key: str) -> float:
+        return self.values[key]
+
+    def get(self, key: str, default=None):
+        return self.values.get(key, default)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.values
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self.values)
+
+    def __len__(self) -> int:
+        return len(self.values)
+
+    def __bool__(self) -> bool:
+        return bool(self.values or self.children)
+
+    def keys(self):
+        return self.values.keys()
+
+    def items(self):
+        return self.values.items()
+
+    def to_dict(self) -> dict:
+        """Plain-dict rendering (scalars first, children nested), stable
+        across runs — the benchmark/JSON wire format."""
+        out: dict = dict(self.values)
+        for key, child in self.children.items():
+            out[key] = _render(child)
+        return out
+
+
+def _render(x):
+    if isinstance(x, MetricsSnapshot):
+        return x.to_dict()
+    if isinstance(x, dict):
+        return {k: _render(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_render(v) for v in x]
+    return x
 
 
 class ReservoirQuantile:
@@ -155,6 +221,13 @@ class RolloutMetrics:
     harvests: int = 0
     updates: int = 0
     updates_gated: int = 0          # batches vetoed by policy.update_gate
+    batch_skipped: int = 0          # entries dropped from update batches
+                                    # (entries_to_batch prompt >= max_len)
+    # trainer-busy accounting (modeled trainer compute seconds): total is
+    # every update's cost; stalled is the un-overlapped part rollout
+    # actually waited for.  Serialized hand-off => stalled == total.
+    update_time_total: float = 0.0
+    update_time_stalled: float = 0.0
     # paged-KV-cache gauges (zero for engines without a page pool)
     prefill_tokens_saved: int = 0   # prefix sharing + resume-without-reprefill
     page_occupancy_peak: float = 0.0
@@ -240,6 +313,20 @@ class RolloutMetrics:
         T = self.elapsed
         return self.tokens_generated / T if T > 0 else 0.0
 
+    @property
+    def update_overlap_frac(self) -> float:
+        """Share of trainer compute hidden behind continued rollout
+        (0 for the serialized hand-off, > 0 under overlap mode)."""
+        if self.update_time_total <= 0:
+            return 0.0
+        return 1.0 - self.update_time_stalled / self.update_time_total
+
+    @property
+    def trainer_busy_frac(self) -> float:
+        """Trainer compute as a fraction of total rollout wall time."""
+        T = self.elapsed
+        return self.update_time_total / T if T > 0 else 0.0
+
     def merge(self, other: "RolloutMetrics") -> None:
         assert other.capacity == self.capacity
         self.intervals.extend(other.intervals)
@@ -249,6 +336,9 @@ class RolloutMetrics:
         self.harvests += other.harvests
         self.updates += other.updates
         self.updates_gated += other.updates_gated
+        self.batch_skipped += other.batch_skipped
+        self.update_time_total += other.update_time_total
+        self.update_time_stalled += other.update_time_stalled
         self.prefill_tokens_saved += other.prefill_tokens_saved
         self.page_occupancy_peak = max(self.page_occupancy_peak,
                                        other.page_occupancy_peak)
@@ -277,8 +367,10 @@ class RolloutMetrics:
             out[name] = rec
         return out
 
-    def summary(self) -> dict:
-        out = {
+    def snapshot(self, source: str = "rollout") -> MetricsSnapshot:
+        """The typed observability record for this run (``summary()`` is
+        its plain-dict rendering)."""
+        values = {
             "elapsed": round(self.elapsed, 3),
             "bubble_ratio": round(self.bubble_ratio, 4),
             "throughput_tok_per_s": round(self.throughput, 1),
@@ -287,6 +379,10 @@ class RolloutMetrics:
             "harvests": self.harvests,
             "updates": self.updates,
             "updates_gated": self.updates_gated,
+            "batch_skipped": self.batch_skipped,
+            "update_time_s": round(self.update_time_total, 4),
+            "update_overlap_frac": round(self.update_overlap_frac, 4),
+            "trainer_busy_frac": round(self.trainer_busy_frac, 4),
             "prefill_tokens_saved": self.prefill_tokens_saved,
             "page_occupancy_peak": round(self.page_occupancy_peak, 4),
             "steal_count": self.steal_count,
@@ -302,6 +398,10 @@ class RolloutMetrics:
         }
         # only serving runs carry tenants — keep non-serving summaries
         # (quickstart output, benchmark rows) byte-stable
-        if self.tenants:
-            out["tenants"] = self.tenant_summary()
-        return out
+        children = ({"tenants": self.tenant_summary()}
+                    if self.tenants else {})
+        return MetricsSnapshot(source=source, values=values,
+                               children=children)
+
+    def summary(self) -> dict:
+        return self.snapshot().to_dict()

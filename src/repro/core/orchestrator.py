@@ -10,11 +10,28 @@ entirely in a :class:`~repro.core.policy.SchedulerPolicy`:
     orch = RolloutOrchestrator(engine, buffer, cfg, policy, train_fn)
     orch.run_group(prompts, metas)
 
-The trainer hand-off is typed: ``train_fn`` receives an
-:class:`UpdateRequest` (entries, trainer version, group epoch, per-batch
-staleness stats) and may return an :class:`UpdateResult`.  Before each
-hand-off the policy's ``update_gate`` may veto the batch (PipelineRL-style
-staleness cap); vetoed batches are consumed but not trained.
+The trainer hand-off is typed: the orchestrator talks to a
+:class:`~repro.rl.trainer_api.Trainer` (``submit`` / ``poll`` / ``flush``)
+carrying :class:`UpdateRequest` batches (entries, trainer version, group
+epoch, per-batch staleness stats) and collecting :class:`UpdateResult`
+outcomes.  A bare ``TrainFn`` callable is still accepted everywhere — the
+:func:`~repro.rl.trainer_api.as_trainer` shim wraps it in a zero-cost
+synchronous trainer (deprecated path; new call sites should pass a
+trainer built by ``make_trainer``).  Before each hand-off the policy's
+``update_gate`` may veto the batch (PipelineRL-style staleness cap);
+vetoed batches are consumed but not trained.
+
+With ``cfg.overlap_updates`` and a trainer whose ``supports_overlap`` is
+True (``make_trainer("streaming")``), submitted update batches charge
+their modeled trainer time *concurrently* with continued rollout: the
+weight sync lands in-flight mid-rollout when ``poll`` observes the
+modeled completion time passing, and only un-overlapped trainer time
+stalls the rollout clock (``metrics.update_overlap_frac`` reports the
+overlapped share).  Mode semantics are preserved per entry: partial mode
+keeps decoding through the sync (the per-token version stamps build the
+stitched pi_old), while on-policy mode invalidates every in-flight entry
+at the sync point — exactly the retain-vs-invalidate rule the
+version-stamped KV machinery applies.
 
 Entry points mirror the strategies' driving patterns:
 
@@ -32,7 +49,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 from repro.core.buffer import (BufferEntry, EntryState, Mode,
                                StatefulRolloutBuffer)
 from repro.core.engine_api import EngineProtocol, StepEvent
-from repro.core.metrics import RolloutMetrics
+from repro.core.metrics import MetricsSnapshot, RolloutMetrics
 from repro.core.policy import SchedulerPolicy, SchedView
 
 
@@ -61,6 +78,10 @@ class SortedRLConfig:
     # fewest replicas via cross-replica KV migration
     async_step: bool = False
     drain_pack: bool = False
+    # rollout/update overlap: update batches run on the trainer timeline
+    # concurrently with continued rollout and the weight sync lands
+    # mid-rollout; requires a Trainer with supports_overlap (streaming)
+    overlap_updates: bool = False
 
     def __post_init__(self):
         if self.harvest_threshold is not None and self.harvest_threshold < 0:
@@ -100,6 +121,9 @@ class UpdateResult:
     metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
+# DEPRECATED hand-off shape: kept as the shim target for existing call
+# sites — as_trainer wraps any such callable in a zero-cost SyncTrainer.
+# New code should pass a Trainer (repro.rl.trainer_api.make_trainer).
 TrainFn = Callable[[UpdateRequest], Optional[UpdateResult]]
 
 
@@ -108,16 +132,30 @@ class RolloutOrchestrator:
 
     def __init__(self, engine: EngineProtocol, buffer: StatefulRolloutBuffer,
                  cfg: SortedRLConfig, policy: SchedulerPolicy,
-                 train_fn: TrainFn,
+                 train_fn: "TrainFn | object",
                  metrics: Optional[RolloutMetrics] = None):
+        from repro.rl.trainer_api import as_trainer
         self.engine = engine
         self.buffer = buffer
         self.cfg = cfg
         self.policy = policy
+        # bare callables ride through the deprecated-path shim; Trainer
+        # instances pass through untouched
         self.train_fn = train_fn
+        self.trainer = as_trainer(train_fn)
+        self._overlap = bool(cfg.overlap_updates)
+        if self._overlap and not self.trainer.supports_overlap:
+            raise ValueError(
+                f"overlap_updates=True needs a trainer with "
+                f"supports_overlap (e.g. make_trainer('streaming')); "
+                f"got {getattr(self.trainer, 'name', type(train_fn))!r}")
         self.version = 0
         self.metrics = metrics or RolloutMetrics(capacity=engine.capacity)
         self.update_results: List[UpdateResult] = []
+        # rollout-clock stalls charged for un-overlapped trainer time —
+        # self._now() (engine clock + stalls) is the shared timeline the
+        # trainer's modeled compute is scheduled on
+        self._stall_total = 0.0
         # skip the per-step view build when the policy never admits
         from repro.core.policy import BasePolicy
         self._policy_admits = (getattr(type(policy), "admit_next_group", None)
@@ -127,6 +165,10 @@ class RolloutOrchestrator:
         # fault-tolerant groups surface uids whose replica died without a
         # survivor able to take them; the orchestrator re-rolls those
         self._take_failed = getattr(engine, "take_failed_uids", None)
+
+    def snapshot(self) -> MetricsSnapshot:
+        """The run's typed observability record (see MetricsSnapshot)."""
+        return self.metrics.snapshot()
 
     # -- scheduling snapshot -------------------------------------------------
 
@@ -203,6 +245,9 @@ class RolloutOrchestrator:
             self.metrics.record_cache(self._cache_stats())
         if self._take_failed is not None:
             self._reroll_failed()
+        if self._overlap:
+            # in-flight weight sync: completed updates land mid-rollout
+            self._drain_trainer(flush=False)
 
     def _reroll_failed(self) -> None:
         """Entries whose replica died without re-homing: their engine-side
@@ -252,9 +297,19 @@ class RolloutOrchestrator:
 
     # -- training ------------------------------------------------------------
 
+    def _now(self) -> float:
+        """The rollout timeline trainer compute is scheduled against:
+        engine clock plus every stall already charged for un-overlapped
+        trainer time (wall-clock engines just ride their own clock)."""
+        return self.engine.clock + self._stall_total
+
     def train_ready(self, final: bool = False) -> int:
-        """Order DONE trajectories per the policy and feed the trainer in
-        update_batch batches.  Returns number of updates performed."""
+        """Order DONE trajectories per the policy and submit them to the
+        trainer in update_batch batches.  Without overlap every submission
+        completes (and stalls) inline — the classical serialized hand-off;
+        with overlap submissions queue on the trainer timeline and land
+        via ``poll`` during subsequent rollout steps.  Returns the number
+        of updates completed during this call."""
         ready = self.policy.order_ready(self.buffer.done(), self._view())
         n_updates = 0
         while len(ready) >= self.cfg.update_batch or (
@@ -266,14 +321,53 @@ class RolloutOrchestrator:
             if not self.policy.update_gate(req):
                 self.metrics.updates_gated += 1
                 continue
-            result = self.train_fn(req)
-            if result is not None:
-                self.update_results.append(result)
-            self.version += 1
-            self.engine.sync_weights(self.version)
-            self.metrics.updates += 1
-            n_updates += 1
+            self.trainer.submit(req, now=self._now())
+            if not self._overlap:
+                n_updates += self._drain_trainer(flush=True)
+        if self._overlap:
+            n_updates += self._drain_trainer(flush=final)
         return n_updates
+
+    def _drain_trainer(self, flush: bool) -> int:
+        """Apply completed trainer outcomes: charge un-overlapped trainer
+        time as a rollout stall, bump the version, and sync weights.  With
+        ``flush`` outstanding submissions are forced to completion (group
+        boundary / serialized mode); otherwise only outcomes whose modeled
+        time has already passed land (the in-flight mid-rollout path)."""
+        now = self._now()
+        outcomes = (self.trainer.flush(now) if flush
+                    else self.trainer.poll(now))
+        for o in outcomes:
+            # stall = the part of this update's compute rollout had to
+            # wait for.  Charging it advances self._now(), so a queued
+            # successor's t_start can never exceed the advanced clock —
+            # each outcome stalls at most its own cost.
+            stall = max(0.0, o.t_done - self._now())
+            if stall > 0:
+                self._stall_total += stall
+                self.metrics.record(0, stall)
+            self.metrics.update_time_total += o.cost
+            self.metrics.update_time_stalled += min(o.cost, stall)
+            self._apply_outcome(o)
+        return len(outcomes)
+
+    def _apply_outcome(self, o) -> None:
+        if o.result is not None:
+            self.update_results.append(o.result)
+            self.metrics.batch_skipped += int(
+                o.result.metrics.get("entries_skipped", 0))
+        self.version += 1
+        self.engine.sync_weights(self.version)
+        self.metrics.updates += 1
+        if (self._overlap and self.buffer.mode == Mode.ON_POLICY
+                and self.engine.active_uids()):
+            # the sync landed mid-rollout: on-policy semantics demand
+            # every in-flight entry's tokens come from the *current*
+            # weights, so invalidate them all (interrupt + scavenge
+            # discards their tokens; the next fill re-rolls them fresh).
+            # Partial mode instead retains: decoding continues and the
+            # per-token version stamps keep the stitched pi_old exact.
+            self._harvest_stragglers()
 
     def _update_request(self, entries: List[BufferEntry],
                         final: bool) -> UpdateRequest:
@@ -297,6 +391,7 @@ class RolloutOrchestrator:
             remaining = len(self.buffer.unconsumed()) - len(self.buffer.done())
             self.train_ready(final=(remaining == 0))
             self.buffer.check_invariants()
+        self._drain_trainer(flush=True)   # no update crosses the barrier
         self.buffer.advance_group()
 
     def run_steps(self, n_updates: int) -> None:
@@ -313,6 +408,7 @@ class RolloutOrchestrator:
                                self.buffer.running()):
                 break   # leftover smaller than update_batch; final never
                         # comes without a group barrier
+        self._drain_trainer(flush=True)   # deliver overlapped stragglers
 
     def run_queued(self) -> None:
         """Process every policy-queued group to consumption (pipelined
@@ -339,3 +435,4 @@ class RolloutOrchestrator:
                 self.buffer.advance_group(strict=False)
             elif self.buffer.group_clear():
                 self.buffer.advance_group()
+        self._drain_trainer(flush=True)   # deliver overlapped stragglers

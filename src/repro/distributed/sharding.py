@@ -57,6 +57,78 @@ def logical_constraint(x, logical: Sequence[Optional[str]]):
 
 
 # ---------------------------------------------------------------------------
+# Update-batch sharding (trainer data parallelism)
+# ---------------------------------------------------------------------------
+
+def data_shard_count() -> int:
+    """Total mesh extent the logical ``batch`` axis maps to under the
+    installed rules — the number of equal slices an update batch is split
+    into.  1 outside any context (unit tests, CPU smoke runs)."""
+    ctx = _current()
+    if ctx is None:
+        return 1
+    mesh, rules = ctx
+    spec = rules.get("batch")
+    axes = spec if isinstance(spec, (tuple, list)) else (spec,)
+    size = 1
+    for a in axes:
+        if a is not None:
+            size *= mesh.shape[a]
+    return size
+
+
+def pad_update_batch(batch: Dict[str, object], multiple: int,
+                     pad_token: int = 0) -> Dict[str, object]:
+    """Pad the leading (batch) dim of every array up to a multiple.
+
+    Pad rows are inert: ``tokens`` rows are all ``pad_token`` and every
+    other array (loss_mask, advantages, old_logprobs, ...) is zero, so
+    they contribute nothing to the loss — call this AFTER advantage
+    computation so batch statistics see only real rows.
+    """
+    import numpy as np
+    if multiple <= 1:
+        return batch
+    B = next(iter(batch.values())).shape[0]
+    extra = (-B) % multiple
+    if extra == 0:
+        return batch
+    out = {}
+    for key, x in batch.items():
+        fill = np.zeros((extra,) + tuple(x.shape[1:]), dtype=x.dtype)
+        if key == "tokens":
+            fill = fill + np.asarray(pad_token, dtype=x.dtype)
+        out[key] = jax.numpy.concatenate([jax.numpy.asarray(x),
+                                          jax.numpy.asarray(fill)], axis=0)
+    return out
+
+
+def shard_update_batch(batch: Dict[str, object],
+                       pad_token: int = 0) -> Dict[str, object]:
+    """Shard an update batch's leading dim over the installed mesh.
+
+    Rows are padded to a multiple of :func:`data_shard_count` with inert
+    rows (see :func:`pad_update_batch`), then each array is placed with a
+    NamedSharding so every data shard holds an equal contiguous slice —
+    the trainer's jitted step then runs data-parallel without any gather.
+    Identity outside any :func:`axis_rules` context.
+    """
+    ctx = _current()
+    if ctx is None:
+        return batch
+    mesh, rules = ctx
+    batch = pad_update_batch(batch, data_shard_count(), pad_token)
+    spec = rules.get("batch")
+    out = {}
+    for key, x in batch.items():
+        x = jax.numpy.asarray(x)
+        sharding = NamedSharding(
+            mesh, P(spec, *([None] * (x.ndim - 1))))
+        out[key] = jax.device_put(x, sharding)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Standard rule sets
 # ---------------------------------------------------------------------------
 

@@ -35,7 +35,7 @@ from repro.data.loader import GroupedLoader, TaskGenerator
 from repro.data.tokenizer import Vocab
 from repro.models.model import Model, build_model
 from repro.rl.losses import LossConfig
-from repro.rl.trainer import RLTrainer
+from repro.rl.trainer import RLTrainer, make_trainer
 from repro.rollout.engine import SlotEngine
 from repro.rollout.group import EngineGroup
 from repro.rollout.sim import SimEngine
@@ -188,6 +188,15 @@ class SessionConfig:
     advantage_kind: str = "reinforce_pp"   # reinforce_pp | grpo
     harvest_threshold: Optional[int] = None
     train_leftover: bool = True
+    # trainer hand-off: "sync" (serialized, the classical behavior) or
+    # "streaming" (rollout/update overlap — set overlap_updates too).
+    # update_cost models the trainer's per-batch compute seconds on the
+    # rollout clock (plus update_cost_per_token x generated tokens);
+    # 0.0 keeps every pre-protocol run byte-identical.
+    trainer: str = "sync"
+    overlap_updates: bool = False
+    update_cost: float = 0.0
+    update_cost_per_token: float = 0.0
     sim_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
     # always-on serving tier (repro.serve): setting `arrival` switches the
     # session to continuous batching under a ServingOrchestrator — the
@@ -265,7 +274,8 @@ class RLSession:
                               train_leftover=cfg.train_leftover,
                               num_replicas=cfg.num_replicas,
                               async_step=cfg.async_step,
-                              drain_pack=cfg.drain_pack)
+                              drain_pack=cfg.drain_pack,
+                              overlap_updates=cfg.overlap_updates)
         evals: List[Dict] = []
         sched_history: List[Dict] = []
 
@@ -298,9 +308,15 @@ class RLSession:
             the always-on serving tier: the configured policy wrapped by
             the admission-controlled ServingPolicy over a streaming
             ingress, driven by a ServingOrchestrator."""
+            # the session's update callable rides behind the registered
+            # Trainer front ("sync" serializes; "streaming" + overlap
+            # hides trainer time behind continued rollout)
+            front = make_trainer(
+                cfg.trainer, fn=train_fn, update_cost=cfg.update_cost,
+                update_cost_per_token=cfg.update_cost_per_token)
             if cfg.arrival is None:
                 return RolloutOrchestrator(engine, buffer, scfg, policy,
-                                           train_fn)
+                                           front)
             from repro.serve import (Ingress, ServingOrchestrator,
                                      ServingPolicy, coerce_specs,
                                      make_arrivals)
@@ -334,7 +350,7 @@ class RLSession:
                 # scheduling decision on the simulated clock
                 tick = 0.05
             return ServingOrchestrator(engine, buffer, scfg,
-                                       serving_policy, train_fn,
+                                       serving_policy, front,
                                        ingress=ingress, tick=tick)
 
         if cfg.engine == "slot":

@@ -5,6 +5,18 @@ The importance-sampling denominators come straight from the buffer's cached
 per-token behaviour log-probs — the stitched pi_old of partial mode
 (paper §3.2): a trajectory interrupted at version v and resumed at v+1 has
 its first tokens' ratios computed against v and the rest against v+1.
+
+This module is also the home of the Trainer *protocol* surface
+(``Trainer`` / ``make_trainer("sync"|"streaming")`` / ``as_trainer``),
+re-exported from the jax-free :mod:`repro.rl.trainer_api` — see that
+module for the overlap semantics and the deprecation note on bare
+``TrainFn`` callables.
+
+Batch assembly is mesh-aware: under an installed
+:func:`repro.distributed.sharding.axis_rules` context the finished batch
+is padded to the data-shard count and placed shard-per-device
+(:func:`~repro.distributed.sharding.shard_update_batch`); outside any
+context it stays a plain host batch.
 """
 from __future__ import annotations
 
@@ -18,9 +30,16 @@ import numpy as np
 
 from repro.core.buffer import BufferEntry
 from repro.core.orchestrator import UpdateRequest, UpdateResult
+from repro.distributed.sharding import shard_update_batch
 from repro.models.model import Model
 from repro.rl import advantages as A
 from repro.rl.losses import LossConfig, total_loss
+# the typed trainer front (protocol + registry + callable shim) lives in
+# the jax-free trainer_api module; re-exported here as the public surface
+from repro.rl.trainer_api import (CostSpec, StreamingTrainer, SyncTrainer,
+                                  TrainOutcome, Trainer, as_trainer,
+                                  available_trainers, make_trainer,
+                                  register_trainer)
 from repro.train.optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
 
 
@@ -106,6 +125,10 @@ def entries_to_batch(entries: Sequence[BufferEntry], reward_fn: RewardFn,
         "advantages": adv,
         "old_logprobs": jnp.asarray(old_lp),
     }
+    # mesh-aware placement: pads to the data-shard count with inert rows
+    # and device_puts shard-per-slice; identity outside an axis_rules
+    # context, so host-only callers and token-identity pins are untouched
+    batch = shard_update_batch(batch, pad_token=pad_id)
     info = {
         "reward_mean": float(rewards.mean()),
         "reward_std": float(rewards.std()),

@@ -132,6 +132,7 @@ from typing import (Callable, Dict, List, Optional, Sequence, Tuple)
 from repro.core.buffer import BufferEntry
 from repro.core.engine_api import (EngineProtocol, FaultEvent, FaultInjector,
                                    SlotTable, StepEvent)
+from repro.core.metrics import MetricsSnapshot
 
 def tenant_of(entry: BufferEntry) -> Optional[str]:
     """The serving tier tags entries with a tenant through their meta
@@ -992,8 +993,10 @@ class EngineGroup:
                                    if u in live}
         return out
 
-    def replica_stats(self) -> List[Dict[str, float]]:
-        """Per-replica detail behind the aggregated ``cache_stats()``."""
+    def replica_stats(self) -> List[MetricsSnapshot]:
+        """Per-replica detail behind the aggregated ``cache_stats()``,
+        one :class:`MetricsSnapshot` per replica (Mapping-compatible, so
+        legacy dict-indexing callers are unaffected)."""
         out = []
         for i, r in enumerate(self.replicas):
             cap = self._cap_time[i]
@@ -1012,11 +1015,12 @@ class EngineGroup:
                 rec["stale_kv_reuses"] = sub.get("stale_kv_reuses", 0.0)
                 rec["prefill_tokens_saved"] = sub.get(
                     "prefill_tokens_saved", 0.0)
-            out.append(rec)
+            out.append(MetricsSnapshot(source=f"replica{i}", values=rec))
         return out
 
-    def cache_stats(self) -> Dict[str, float]:
-        """Group gauges + the replicas' paged-KV counters summed.
+    def cache_stats(self) -> MetricsSnapshot:
+        """Group gauges + the replicas' paged-KV counters summed, as one
+        :class:`MetricsSnapshot` (Mapping-compatible).
 
         Always non-None (even over SimEngine replicas), so the
         orchestrator's ``record_cache`` plumbing picks the group fields up
@@ -1052,4 +1056,4 @@ class EngineGroup:
             # replica sits at 1.0 evicting resident KV.
             out["page_occupancy"] = max(
                 float(s.get("page_occupancy", 0.0)) for s in subs)
-        return out
+        return MetricsSnapshot(source="engine_group", values=out)

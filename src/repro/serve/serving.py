@@ -38,7 +38,7 @@ from typing import Optional
 
 from repro.core.buffer import EntryState, StatefulRolloutBuffer
 from repro.core.engine_api import EngineProtocol
-from repro.core.metrics import RolloutMetrics
+from repro.core.metrics import MetricsSnapshot, RolloutMetrics
 from repro.core.orchestrator import (RolloutOrchestrator, SortedRLConfig,
                                      TrainFn, UpdateRequest)
 from repro.core.policy import SchedulerPolicy
@@ -70,6 +70,12 @@ class ServingOrchestrator(RolloutOrchestrator):
         self.tick = tick
         self._tick_now = 0.0
         self._idle_skipped = 0.0
+
+    def snapshot(self) -> MetricsSnapshot:
+        """The serving tier's typed observability record — the shared
+        rollout gauges tagged ``source="serving"`` with the per-tenant
+        records nested as children."""
+        return self.metrics.snapshot(source="serving")
 
     # -- the serving clock -------------------------------------------------
 

@@ -135,3 +135,82 @@ def test_tenant_summary_throughput():
     m.tenant("a").tokens = 8
     rec = m.tenant_summary()["a"]
     assert rec["throughput_tok_per_s"] == pytest.approx(4.0)
+
+
+# -- MetricsSnapshot (the unified typed observability record) -----------------
+
+def test_snapshot_mapping_surface():
+    from repro.core.metrics import MetricsSnapshot
+    s = MetricsSnapshot(source="x", values={"a": 1.0, "b": 2.0})
+    assert s["a"] == 1.0
+    assert s.get("b") == 2.0 and s.get("zzz", -1) == -1
+    assert "a" in s and "zzz" not in s
+    assert list(s) == ["a", "b"] and len(s) == 2
+    assert dict(s) == {"a": 1.0, "b": 2.0}       # keys()-driven coercion
+    d = {"pre": 0}
+    d.update(s)                                  # legacy dict.update path
+    assert d == {"pre": 0, "a": 1.0, "b": 2.0}
+    assert bool(MetricsSnapshot(source="e")) is False
+    assert bool(s) is True
+
+
+def test_snapshot_to_dict_renders_children():
+    from repro.core.metrics import MetricsSnapshot
+    child = MetricsSnapshot(source="replica0", values={"tokens": 3.0})
+    s = MetricsSnapshot(source="group", values={"n": 2.0},
+                        children={"replicas": [child],
+                                  "tenants": {"a": {"arrivals": 1}}})
+    d = s.to_dict()
+    assert d == {"n": 2.0, "replicas": [{"tokens": 3.0}],
+                 "tenants": {"a": {"arrivals": 1}}}
+
+
+def test_rollout_metrics_snapshot_matches_summary():
+    m = RolloutMetrics(capacity=4)
+    m.record(running=4, dt=2.0, new_tokens=8)
+    m.update_time_total = 1.0
+    m.update_time_stalled = 0.25
+    m.batch_skipped = 3
+    snap = m.snapshot()
+    assert snap.source == "rollout"
+    assert snap.to_dict() == m.summary()
+    assert snap["batch_skipped"] == 3
+    assert snap["update_overlap_frac"] == pytest.approx(0.75)
+    assert m.snapshot(source="serving").source == "serving"
+
+
+def test_overlap_frac_gauges():
+    m = RolloutMetrics(capacity=4)
+    assert m.update_overlap_frac == 0.0          # no updates yet
+    m.update_time_total = 2.0
+    m.update_time_stalled = 2.0
+    assert m.update_overlap_frac == 0.0          # fully serialized
+    m.update_time_stalled = 0.0
+    assert m.update_overlap_frac == 1.0          # fully hidden
+    m.record(running=4, dt=4.0)
+    assert m.trainer_busy_frac == pytest.approx(0.5)
+
+
+def test_merge_sums_overlap_counters():
+    a, b = RolloutMetrics(capacity=4), RolloutMetrics(capacity=4)
+    a.update_time_total, a.update_time_stalled, a.batch_skipped = 1.0, 0.5, 1
+    b.update_time_total, b.update_time_stalled, b.batch_skipped = 3.0, 1.5, 2
+    a.merge(b)
+    assert a.update_time_total == 4.0
+    assert a.update_time_stalled == 2.0
+    assert a.batch_skipped == 3
+
+
+def test_engine_group_emits_snapshots():
+    from repro.core.metrics import MetricsSnapshot
+    from repro.rollout.group import EngineGroup
+    from repro.rollout.sim import SimEngine
+    g = EngineGroup([SimEngine(capacity=2, max_gen_len=4, seed=i)
+                     for i in range(2)])
+    cs = g.cache_stats()
+    assert isinstance(cs, MetricsSnapshot) and cs.source == "engine_group"
+    rs = g.replica_stats()
+    assert [r.source for r in rs] == ["replica0", "replica1"]
+    # record_cache consumes the snapshot through the Mapping surface
+    m = RolloutMetrics(capacity=4)
+    m.record_cache(cs)

@@ -1,0 +1,111 @@
+"""Unit tests for update-batch data sharding
+(repro.distributed.sharding: data_shard_count / pad_update_batch /
+shard_update_batch) and its wiring into entries_to_batch.
+
+Runs on however many CPU devices the test process has (usually 1): the
+mesh is built over the available devices, so the padding/placement logic
+is exercised without requiring a multi-chip host.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.sharding import (axis_rules, data_shard_count,
+                                        pad_update_batch, shard_update_batch)
+
+
+def _mesh():
+    from jax.sharding import Mesh
+    devs = np.array(jax.devices()).reshape(-1)
+    return Mesh(devs, ("data",))
+
+
+def _batch(B, W=8, pad=7):
+    return {
+        "tokens": jnp.full((B, W), 3, jnp.int32),
+        "loss_mask": jnp.ones((B, W), jnp.float32),
+        "advantages": jnp.ones((B,), jnp.float32),
+    }
+
+
+def test_shard_count_outside_context():
+    assert data_shard_count() == 1
+
+
+def test_shard_count_under_rules():
+    mesh = _mesh()
+    with axis_rules(mesh, {"batch": "data"}):
+        assert data_shard_count() == mesh.shape["data"]
+    with axis_rules(mesh, {"batch": None}):
+        assert data_shard_count() == 1      # replicated batch: one slice
+    assert data_shard_count() == 1          # context restored
+
+
+def test_pad_update_batch_inert_rows():
+    b = pad_update_batch(_batch(5), multiple=4, pad_token=7)
+    assert all(x.shape[0] == 8 for x in b.values())
+    # pad rows are inert: tokens all pad_token, everything else zero
+    assert np.all(np.asarray(b["tokens"])[5:] == 7)
+    assert np.all(np.asarray(b["loss_mask"])[5:] == 0.0)
+    assert np.all(np.asarray(b["advantages"])[5:] == 0.0)
+    # real rows untouched
+    assert np.all(np.asarray(b["tokens"])[:5] == 3)
+
+
+def test_pad_update_batch_identity_when_aligned():
+    b = _batch(8)
+    assert pad_update_batch(b, multiple=4) is b
+    assert pad_update_batch(b, multiple=1) is b
+    assert pad_update_batch(b, multiple=0) is b
+
+
+def test_shard_update_batch_identity_outside_context():
+    b = _batch(5)
+    assert shard_update_batch(b) is b
+
+
+def test_shard_update_batch_places_and_pads():
+    mesh = _mesh()
+    n = mesh.shape["data"]
+    with axis_rules(mesh, {"batch": "data"}):
+        out = shard_update_batch(_batch(5), pad_token=7)
+    B = out["tokens"].shape[0]
+    assert B % n == 0 and B >= 5
+    for x in out.values():
+        assert x.sharding.mesh.shape == mesh.shape
+    # values survive placement
+    assert np.all(np.asarray(out["tokens"])[:5] == 3)
+
+
+def test_entries_to_batch_shards_under_rules():
+    """entries_to_batch routes through shard_update_batch: under rules the
+    batch comes back padded to the shard count with an inert loss mask on
+    pad rows, so the loss and advantage statistics see only real rows."""
+    from repro.core.buffer import BufferEntry, EntryState
+    from repro.rl.trainer import entries_to_batch
+
+    def entry(uid, gen):
+        return BufferEntry(uid=uid, prompt=[1, 2, 3], meta=None,
+                           generated=list(gen),
+                           logprobs=[-0.5] * len(gen),
+                           versions=[0] * len(gen),
+                           state=EntryState.DONE, finish_reason="eos")
+
+    entries = [entry(i, range(4, 4 + i + 1)) for i in range(3)]
+    reward = lambda gen, meta: 1.0
+    plain, info = entries_to_batch(entries, reward, pad_id=0, max_len=64,
+                                   current_version=0)
+    mesh = _mesh()
+    with axis_rules(mesh, {"batch": "data"}):
+        sharded, info2 = entries_to_batch(entries, reward, pad_id=0,
+                                          max_len=64, current_version=0)
+    assert info == info2                       # stats ignore pad rows
+    n = mesh.shape["data"]
+    want = plain["tokens"].shape[0] + (-3) % n
+    assert sharded["tokens"].shape[0] == want
+    real = np.asarray(sharded["loss_mask"])[:3]
+    assert np.array_equal(real, np.asarray(plain["loss_mask"]))
+    assert np.all(np.asarray(sharded["loss_mask"])[3:] == 0.0)
+    with pytest.raises(KeyError):
+        sharded["nope"]

@@ -1,0 +1,391 @@
+"""Trainer-conformance suite: the executable contract of the Trainer
+protocol (repro.rl.trainer_api) behind the orchestrator's update path.
+
+Both registered trainers (``sync`` / ``streaming``) are driven by the
+shared RolloutOrchestrator across every registered scheduling policy,
+both engine kinds (discrete-event SimEngine and real-decode SlotEngine),
+and EngineGroup replica counts {1, 2, 4} — the same sweep surface as
+policy_conformance, so a trainer swap inherits the whole scheduling
+contract:
+
+  * conservation — every loaded prompt is trained exactly once through
+    either trainer front, and all owed updates are delivered even when
+    completions land mid-rollout (overlap mode);
+  * staleness accounting — every UpdateRequest's ``staleness_mean/max``
+    equals the values recomputed from its entries' per-token version
+    stamps, trainer front and overlap notwithstanding;
+  * sync-mode identity — wrapping a bare TrainFn in a SyncTrainer (with
+    a nonzero modeled cost) changes NOTHING observable about scheduling:
+    trained uid order, per-entry token streams (greedy decode included),
+    and per-request staleness stats are bit-identical to the deprecated
+    bare-callable path;
+  * mode semantics under overlap — a weight sync landing mid-trajectory
+    leaves stitched pi_old entries (>= 2 distinct per-token versions) in
+    partial mode, and NEVER leaves a mixed-version trained entry in
+    on-policy mode (in-flight entries are invalidated at the sync).
+"""
+import pytest
+
+from policy_conformance import (CAPACITY, GROUP, MAX_GEN, N_PROMPTS,
+                                ENGINE_FACTORIES, prompts)
+from repro.core.buffer import EntryState, Mode, StatefulRolloutBuffer
+from repro.core.orchestrator import (RolloutOrchestrator, SortedRLConfig,
+                                     UpdateRequest, UpdateResult)
+from repro.core.policy import available_policies, make_policy
+from repro.rl.trainer_api import (StreamingTrainer, SyncTrainer, Trainer,
+                                  as_trainer, available_trainers,
+                                  make_trainer)
+from repro.rollout.sim import SimEngine, lognormal_lengths
+
+# the ISSUE-mandated sweep surface: both engines, replicas {1, 2, 4}
+ENGINE_NAMES = ("sim", "slot", "group1_sim", "group2_sim", "group4_sim",
+                "group2_slot")
+UPDATE_COST = 0.5     # modeled trainer seconds per batch (nonzero on
+                      # purpose: cost accounting must not perturb anything)
+
+
+def build(policy_name, engine_name, trainer_kind, mode=Mode.PARTIAL,
+          **policy_kwargs):
+    eng = ENGINE_FACTORIES[engine_name]()
+    buf = StatefulRolloutBuffer(mode)
+    cfg = SortedRLConfig(mode=mode, rollout_batch=CAPACITY,
+                         group_size=GROUP, update_batch=CAPACITY,
+                         max_gen_len=MAX_GEN,
+                         overlap_updates=(trainer_kind == "streaming"))
+    policy = make_policy(policy_name, **policy_kwargs)
+    reqs = []
+    trainer = make_trainer(trainer_kind, fn=reqs.append,
+                           update_cost=UPDATE_COST)
+    return RolloutOrchestrator(eng, buf, cfg, policy, trainer), reqs
+
+
+_DRIVE_CACHE = {}
+
+
+def drive(trainer_kind, policy_name, engine_name, n_groups=2):
+    """Run the policy's native driving pattern behind the given trainer
+    front (memoized — deterministic, and the invariant tests only read);
+    returns (orchestrator, captured UpdateRequests, loaded count)."""
+    key = (trainer_kind, policy_name, engine_name, n_groups)
+    if key not in _DRIVE_CACHE:
+        _DRIVE_CACHE[key] = _drive(trainer_kind, policy_name, engine_name,
+                                   n_groups)
+    return _DRIVE_CACHE[key]
+
+
+def _drive(trainer_kind, policy_name, engine_name, n_groups):
+    if policy_name == "ungrouped":
+        stream = iter([(p, None) for p in prompts(n_groups * N_PROMPTS)])
+        orch, reqs = build(policy_name, engine_name, trainer_kind,
+                           prompt_stream=stream)
+        orch.run_steps(n_updates=n_groups * GROUP)
+        loaded = len(orch.buffer.entries)   # never advances groups
+    elif policy_name == "pipelined":
+        orch, reqs = build(policy_name, engine_name, trainer_kind)
+        for g in range(n_groups):
+            orch.policy.queue_group(prompts(N_PROMPTS, start=g))
+        orch.run_queued()
+        loaded = n_groups * N_PROMPTS
+    else:
+        orch, reqs = build(policy_name, engine_name, trainer_kind)
+        for g in range(n_groups):
+            orch.run_group(prompts(N_PROMPTS, start=g))
+        loaded = n_groups * N_PROMPTS
+    return orch, reqs, loaded
+
+
+@pytest.fixture(params=ENGINE_NAMES)
+def engine_name(request):
+    return request.param
+
+
+@pytest.fixture(params=available_policies())
+def policy_name(request):
+    return request.param
+
+
+@pytest.fixture(params=available_trainers())
+def trainer_kind(request):
+    return request.param
+
+
+# -- registry + shim surface --------------------------------------------------
+
+def test_registry_contract():
+    names = available_trainers()
+    assert "sync" in names and "streaming" in names
+    for name in names:
+        t = make_trainer(name, fn=lambda req: None)
+        assert isinstance(t, Trainer)
+        assert t.name == name
+        assert t.pending == 0
+    with pytest.raises(KeyError):
+        make_trainer("no_such_trainer")
+    assert SyncTrainer(lambda r: None).supports_overlap is False
+    assert StreamingTrainer(lambda r: None).supports_overlap is True
+
+
+def test_as_trainer_shim():
+    # deprecated bare-callable path: wrapped into a zero-cost SyncTrainer
+    calls = []
+    t = as_trainer(calls.append)
+    assert isinstance(t, SyncTrainer) and t.update_cost == 0.0
+    # a Trainer passes through untouched
+    st = make_trainer("streaming", fn=lambda r: None)
+    assert as_trainer(st) is st
+    with pytest.raises(TypeError):
+        as_trainer(42)
+
+
+def test_overlap_requires_capability():
+    eng = SimEngine(capacity=CAPACITY, max_gen_len=MAX_GEN, seed=0)
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    cfg = SortedRLConfig(mode=Mode.PARTIAL, rollout_batch=CAPACITY,
+                         group_size=GROUP, update_batch=CAPACITY,
+                         max_gen_len=MAX_GEN, overlap_updates=True)
+    with pytest.raises(ValueError, match="supports_overlap"):
+        RolloutOrchestrator(eng, buf, cfg, make_policy("sorted"),
+                            lambda req: None)
+
+
+def test_negative_cost_rejected():
+    t = make_trainer("sync", fn=lambda r: None, update_cost=-1.0)
+    req = UpdateRequest(entries=[], version=0, group_epoch=0, final=True,
+                        staleness_mean=0.0, staleness_max=0.0)
+    with pytest.raises(ValueError, match=">= 0"):
+        t.submit(req, now=0.0)
+
+
+# -- the sweep: trainers x policies x engines x replicas ----------------------
+
+def test_conservation(trainer_kind, policy_name, engine_name):
+    orch, reqs, loaded = drive(trainer_kind, policy_name, engine_name)
+    uids = [e.uid for r in reqs for e in r.entries]
+    assert len(uids) == len(set(uids)), "an entry trained twice"
+    if policy_name == "ungrouped":
+        consumed = {u for u, e in orch.buffer.entries.items()
+                    if e.state == EntryState.CONSUMED}
+        assert set(uids) == consumed
+    else:
+        assert sorted(uids) == list(range(loaded)), \
+            "every loaded prompt must be trained exactly once"
+    # the trainer front must end drained: nothing submitted is in flight
+    assert orch.trainer.pending == 0
+
+
+def test_all_updates_delivered(trainer_kind, policy_name, engine_name):
+    orch, reqs, loaded = drive(trainer_kind, policy_name, engine_name)
+    assert orch.engine.free_slots() == orch.engine.capacity
+    if policy_name == "ungrouped":
+        return   # starves long prompts by design
+    assert orch.buffer.group_clear()
+    delivered = orch.metrics.updates + orch.metrics.updates_gated
+    if orch.policy.strict_group_barrier:
+        assert delivered == loaded // CAPACITY
+    else:
+        assert delivered >= loaded // CAPACITY
+    # trainer-busy accounting: every delivered update charged its cost
+    assert orch.metrics.update_time_total == pytest.approx(
+        UPDATE_COST * orch.metrics.updates)
+
+
+def test_staleness_accounting(trainer_kind, policy_name, engine_name):
+    """Every request's staleness stats must equal the values recomputed
+    from its entries' per-token version stamps — overlap must not change
+    the accounting, only WHEN the version advances."""
+    _, reqs, _ = drive(trainer_kind, policy_name, engine_name)
+    assert reqs
+    for r in reqs:
+        st = [e.staleness(r.version) for e in r.entries]
+        assert r.staleness_mean == pytest.approx(sum(st) / len(st))
+        assert r.staleness_max == pytest.approx(max(st))
+
+
+def test_buffer_invariants_throughout(trainer_kind, policy_name,
+                                      engine_name):
+    orch, _, _ = drive(trainer_kind, policy_name, engine_name)
+    orch.buffer.check_invariants()
+
+
+# -- sync-mode identity: the protocol shim changes nothing --------------------
+
+def _token_streams(reqs):
+    return {e.uid: (tuple(e.generated), tuple(e.versions))
+            for r in reqs for e in r.entries}
+
+
+def test_sync_mode_identity(policy_name, engine_name):
+    """Bare callable (deprecated path) vs SyncTrainer with a modeled cost:
+    trained uid order, token streams, version stamps, and staleness stats
+    must be identical — cost accounting is observability-only."""
+    # side A: the memoized sweep run behind SyncTrainer(update_cost>0);
+    # side B: a fresh run through the deprecated bare-callable shim path
+    orch_a, reqs_a, _ = drive("sync", policy_name, engine_name)
+    if policy_name == "ungrouped":
+        stream_b = iter([(p, None) for p in prompts(2 * N_PROMPTS)])
+        orch_b, reqs_b = _build_bare(policy_name, engine_name,
+                                     prompt_stream=stream_b)
+        orch_b.run_steps(n_updates=2 * GROUP)
+    elif policy_name == "pipelined":
+        orch_b, reqs_b = _build_bare(policy_name, engine_name)
+        for g in range(2):
+            orch_b.policy.queue_group(prompts(N_PROMPTS, start=g))
+        orch_b.run_queued()
+    else:
+        orch_b, reqs_b = _build_bare(policy_name, engine_name)
+        for g in range(2):
+            orch_b.run_group(prompts(N_PROMPTS, start=g))
+    assert [[e.uid for e in r.entries] for r in reqs_a] == \
+           [[e.uid for e in r.entries] for r in reqs_b]
+    assert _token_streams(reqs_a) == _token_streams(reqs_b)
+    assert [(r.staleness_mean, r.staleness_max) for r in reqs_a] == \
+           [(r.staleness_mean, r.staleness_max) for r in reqs_b]
+    # only the accounting differs: the shim run charged its modeled cost
+    # (approx: wall-clock engines drift a few µs between submit and drain)
+    assert orch_a.metrics.update_time_total == pytest.approx(
+        UPDATE_COST * orch_a.metrics.updates)
+    assert orch_a.metrics.update_overlap_frac == pytest.approx(0.0, abs=1e-3)
+    assert orch_b.metrics.update_time_total == 0.0
+
+
+def _build_bare(policy_name, engine_name, **policy_kwargs):
+    """The deprecated bare-callable hand-off (as_trainer shim target)."""
+    eng = ENGINE_FACTORIES[engine_name]()
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    cfg = SortedRLConfig(mode=Mode.PARTIAL, rollout_batch=CAPACITY,
+                         group_size=GROUP, update_batch=CAPACITY,
+                         max_gen_len=MAX_GEN)
+    reqs = []
+    orch = RolloutOrchestrator(eng, buf, cfg, make_policy(policy_name,
+                                                          **policy_kwargs),
+                               reqs.append)
+    return orch, reqs
+
+
+@pytest.mark.slow
+def test_greedy_token_identity_slot():
+    """Greedy (temperature 0) real decode: the SyncTrainer shim must not
+    change a single sampled token vs the bare-callable path."""
+    from engine_conformance import MAX_TOTAL, _tiny_model
+    from repro.data import logic
+    from repro.rollout.engine import SlotEngine
+
+    def run(train_fn_or_trainer):
+        t = _tiny_model()
+        eng = SlotEngine(t["model"], lambda: t["params"], capacity=CAPACITY,
+                         max_total_len=MAX_TOTAL, max_gen_len=MAX_GEN,
+                         eos_id=logic.VOCAB.eos_id, pad_id=t["pad"],
+                         temperature=0.0)
+        buf = StatefulRolloutBuffer(Mode.PARTIAL)
+        cfg = SortedRLConfig(mode=Mode.PARTIAL, rollout_batch=CAPACITY,
+                             group_size=GROUP, update_batch=CAPACITY,
+                             max_gen_len=MAX_GEN)
+        reqs = []
+        fn = (make_trainer("sync", fn=reqs.append, update_cost=UPDATE_COST)
+              if train_fn_or_trainer == "trainer" else reqs.append)
+        orch = RolloutOrchestrator(eng, buf, cfg, make_policy("sorted"), fn)
+        orch.run_group(prompts(N_PROMPTS))
+        return reqs
+
+    assert _token_streams(run("trainer")) == _token_streams(run("bare"))
+
+
+# -- overlap semantics: retain vs invalidate at the in-flight sync ------------
+
+def _overlap_sim(mode, update_cost=0.3):
+    eng = SimEngine(capacity=8, max_gen_len=64, seed=0,
+                    length_sampler=lognormal_lengths(median=16, sigma=1.0,
+                                                     max_len=64))
+    buf = StatefulRolloutBuffer(mode)
+    cfg = SortedRLConfig(mode=mode, rollout_batch=8, group_size=4,
+                         update_batch=8, max_gen_len=64,
+                         overlap_updates=True)
+    reqs = []
+    trainer = make_trainer("streaming", fn=reqs.append,
+                           update_cost=update_cost)
+    orch = RolloutOrchestrator(eng, buf, cfg, make_policy("sorted"),
+                               trainer)
+    orch.run_group([[1, 1, 1, 2 + i % 5] for i in range(32)])
+    return orch, reqs
+
+
+def test_overlap_partial_stitches_pi_old():
+    """A sync landing mid-trajectory must leave stitched entries (tokens
+    recorded under >= 2 policy versions) in partial mode, with staleness
+    stats that still recompute exactly from the stamps."""
+    orch, reqs = _overlap_sim(Mode.PARTIAL)
+    stitched = [e for r in reqs for e in r.entries
+                if len(set(e.versions)) > 1]
+    assert stitched, "no sync landed mid-trajectory — overlap not exercised"
+    for r in reqs:
+        st = [e.staleness(r.version) for e in r.entries]
+        assert r.staleness_mean == pytest.approx(sum(st) / len(st))
+        assert r.staleness_max == pytest.approx(max(st))
+    assert orch.metrics.update_overlap_frac > 0.0
+
+
+def test_overlap_on_policy_invalidates():
+    """On-policy overlap: the in-flight sync invalidates running entries,
+    so no trained trajectory ever mixes policy versions — and the
+    discarded tokens show up in the scavenging waste counter."""
+    orch, reqs = _overlap_sim(Mode.ON_POLICY)
+    for r in reqs:
+        for e in r.entries:
+            assert len(set(e.versions)) <= 1, \
+                f"on-policy entry {e.uid} trained across a sync: " \
+                f"{sorted(set(e.versions))}"
+    assert orch.metrics.tokens_discarded > 0
+    assert orch.metrics.updates == len(reqs)
+    # conservation survives the invalidations: every prompt still trains
+    assert sum(len(r.entries) for r in reqs) == 32
+
+
+def test_overlap_strictly_faster_than_serial():
+    """The acceptance relation behind the overlap/fig1a_* bench rows, in
+    miniature: same workload + same modeled trainer cost, overlapped
+    wall-clock strictly below serialized, same work delivered."""
+    def run(overlap):
+        eng = SimEngine(capacity=8, max_gen_len=64, seed=0,
+                        length_table={u: 4 + (u * 7) % 48
+                                      for u in range(32)})
+        buf = StatefulRolloutBuffer(Mode.PARTIAL)
+        cfg = SortedRLConfig(mode=Mode.PARTIAL, rollout_batch=8,
+                             group_size=4, update_batch=8, max_gen_len=64,
+                             overlap_updates=overlap)
+        trainer = make_trainer("streaming" if overlap else "sync",
+                               fn=lambda r: None, update_cost=0.3)
+        orch = RolloutOrchestrator(eng, buf, cfg, make_policy("sorted"),
+                                   trainer)
+        orch.run_group([[1, 1, 1, 2 + i % 5] for i in range(32)])
+        return orch.metrics
+
+    serial, stream = run(False), run(True)
+    assert serial.updates == stream.updates
+    assert serial.tokens_generated == stream.tokens_generated
+    assert stream.elapsed < serial.elapsed, (stream.elapsed, serial.elapsed)
+    assert stream.update_overlap_frac > 0.0
+    assert serial.update_overlap_frac == pytest.approx(0.0, abs=1e-9)
+    assert serial.update_time_stalled == pytest.approx(
+        serial.update_time_total)
+
+
+# -- batch_skipped conservation visibility ------------------------------------
+
+def test_batch_skipped_metric():
+    """entries_to_batch reports skipped entries via UpdateResult metrics;
+    the orchestrator folds them into metrics.batch_skipped so conservation
+    checks can see silently-dropped entries."""
+    eng = SimEngine(capacity=CAPACITY, max_gen_len=MAX_GEN, seed=0)
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    cfg = SortedRLConfig(mode=Mode.PARTIAL, rollout_batch=CAPACITY,
+                         group_size=GROUP, update_batch=CAPACITY,
+                         max_gen_len=MAX_GEN)
+
+    def fn(req):
+        return UpdateResult(metrics={"entries_skipped": 2.0})
+
+    orch = RolloutOrchestrator(eng, buf, cfg, make_policy("sorted"), fn)
+    orch.run_group(prompts(N_PROMPTS))
+    assert orch.metrics.batch_skipped == 2 * orch.metrics.updates
+    assert orch.metrics.summary()["batch_skipped"] == \
+        orch.metrics.batch_skipped
