@@ -1,0 +1,198 @@
+"""autoscale/*: feedback-driven fleet autoscaling rows (repro.rollout.autoscaler).
+
+Until now every ``EngineGroup.scale_down``/``scale_up`` call in this repo
+was manual.  These rows close the observe -> scale loop and pin that the
+closed loop actually pays:
+
+  autoscale/long_tail    the replicas/* long-tail workload (same per-uid
+                         lognormal length table, same 24-slot starting
+                         capacity) on a 6-replica elastic fleet driven by
+                         the ``bubble_target`` policy: grow while pending
+                         work starves free capacity, shed replicas as the
+                         windowed Eq. 4 bubble crosses the high-water
+                         mark during the drain phase (RollPacker's
+                         "shedding is free during drain");
+  autoscale/burst_queue  the serving tier under on/off bursty arrivals on
+                         an elastic EngineGroup driven by ``queue_depth``:
+                         grow when per-tenant backlog age threatens SLO
+                         deadlines with no free slot, shed when the
+                         ingress drains and the fleet bubbles.
+
+``main(smoke=True)`` pins the ISSUE's acceptance criteria for
+autoscale/long_tail:
+
+  1. autoscaled wall-clock <= the static 4-replica fleets (both the
+     lockstep ``replicas/r4`` shape and the everything-on
+     ``replicas/r4_pack``) on the identical workload;
+  2. scale_events > 0 — the loop is actually driving the fleet (both
+     directions fire: growth under starvation, sheds in the drain);
+  3. the windowed replica_bubble_ratio at run end is at or under the
+     bubble_target high-water mark — the controller leaves the fleet
+     inside its own target band;
+
+plus, for burst_queue: both scale directions fire, the fleet stays
+within [min_replicas, max_replicas], and per-tenant conservation holds
+(arrivals = completed + shed after the drain).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.bench_replicas import _length_table, _prompts, run_replicas
+from repro.core.buffer import Mode, StatefulRolloutBuffer
+from repro.core.orchestrator import RolloutOrchestrator, SortedRLConfig
+from repro.core.policy import make_policy
+from repro.rollout.autoscaler import Autoscaler
+from repro.rollout.group import EngineGroup
+from repro.rollout.sim import SimEngine, lognormal_lengths
+from repro.serve import (BurstyArrivals, Ingress, ServingOrchestrator,
+                         ServingPolicy, TenantSpec)
+
+# the long_tail row's bubble_target water marks — module-level so the
+# asserted pin and the row's config are visibly the same numbers
+HIGH_WATER = 0.5
+LOW_WATER = 0.15
+
+
+def run_autoscaled(num_replicas: int, n: int, cap_total: int, update: int,
+                   group_size: int, max_gen: int, median: float, sigma: float,
+                   seed: int, min_replicas: int = 1, max_replicas: int = 8,
+                   window: float = 3.0, cooldown: float = 0.5) -> Dict:
+    """The replicas/* workload on an elastic fleet under bubble_target.
+    Starting capacity equals the static rows' ``cap_total``; the factory
+    mints warm shard-sized replicas for scale_up."""
+    assert cap_total % num_replicas == 0
+    lengths = _length_table(n, median, sigma, max_gen, seed)
+    shard = cap_total // num_replicas
+
+    def mk(i: int) -> SimEngine:
+        return SimEngine(capacity=shard, max_gen_len=max_gen, seed=seed + i,
+                         length_table=lengths, kv_residency=True)
+
+    def hint(e):
+        return max(1, lengths.get(e.uid, max_gen) - e.gen_len)
+
+    engine = EngineGroup([mk(i) for i in range(num_replicas)],
+                         balancer="least_tokens", length_hint=hint,
+                         async_step=True, elastic=True)
+    asc = Autoscaler("bubble_target", factory=mk,
+                     min_replicas=min_replicas, max_replicas=max_replicas,
+                     window=window, cooldown=cooldown,
+                     policy_kwargs=dict(high=HIGH_WATER, low=LOW_WATER))
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    cfg = SortedRLConfig(mode=Mode.PARTIAL, rollout_batch=cap_total,
+                         group_size=group_size, update_batch=update,
+                         max_gen_len=max_gen, num_replicas=num_replicas,
+                         async_step=True)
+    orch = RolloutOrchestrator(engine, buf, cfg, make_policy("sorted"),
+                               lambda req: None, autoscaler=asc)
+    orch.run_group(_prompts(n, seed))
+    out = orch.metrics.summary()
+    out["scale_ups"] = sum(1 for e in asc.events if e.direction > 0)
+    out["scale_downs"] = sum(1 for e in asc.events if e.direction < 0)
+    out["end_window_bubble"] = asc.window.bubble()
+    out["alive_end"] = sum(engine.alive)
+    return out
+
+
+def run_burst_queue(n_arrivals: int, num_replicas: int = 2, shard: int = 4,
+                    max_gen: int = 128, median: float = 10.0, seed: int = 3,
+                    min_replicas: int = 1, max_replicas: int = 4) -> Dict:
+    """Bursty two-tenant serving on an elastic EngineGroup driven by the
+    queue_depth policy: backlog age vs SLO deadlines adds replicas, a
+    drained ingress plus a bubbling fleet sheds them."""
+    def mk(i: int) -> SimEngine:
+        return SimEngine(capacity=shard, max_gen_len=max_gen, seed=seed + i,
+                         length_sampler=lognormal_lengths(
+                             median=median, sigma=1.0, max_len=max_gen))
+
+    engine = EngineGroup([mk(i) for i in range(num_replicas)],
+                         balancer="least_tokens", elastic=True)
+    asc = Autoscaler("queue_depth", factory=mk, min_replicas=min_replicas,
+                     max_replicas=max_replicas, window=1.0, cooldown=0.5,
+                     policy_kwargs=dict(wait_frac=0.5, target_wait=2.0,
+                                        idle_bubble=0.5))
+    tenants = (TenantSpec("batch", weight=1.0, queue_capacity=1024),
+               TenantSpec("interactive", weight=8.0, latency_slo=1.0,
+                          queue_capacity=1024))
+    process = BurstyArrivals({"batch": 120.0, "interactive": 15.0},
+                             seed=11, on_time=0.3, off_time=0.7)
+    ingress = Ingress(tenants, process)
+    policy = ServingPolicy(inner="sorted", admission="slo_aware",
+                           ingress=ingress)
+    cap_total = num_replicas * shard
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    cfg = SortedRLConfig(mode=Mode.PARTIAL, rollout_batch=cap_total,
+                         group_size=1, update_batch=cap_total,
+                         max_gen_len=max_gen, num_replicas=num_replicas)
+    orch = ServingOrchestrator(engine, buf, cfg, policy, lambda req: None,
+                               autoscaler=asc)
+    orch.run_for(n_arrivals=n_arrivals)
+    out = {"elapsed": orch.metrics.elapsed,
+           "tenants": orch.metrics.tenant_summary(),
+           "scale_ups": sum(1 for e in asc.events if e.direction > 0),
+           "scale_downs": sum(1 for e in asc.events if e.direction < 0),
+           "alive_end": sum(engine.alive),
+           "num_replicas_end": len(engine.replicas),
+           "min_replicas": min_replicas, "max_replicas": max_replicas}
+    return out
+
+
+def main(smoke: bool = False) -> List[str]:
+    if smoke:
+        kw = dict(n=96, cap_total=24, update=24, group_size=4,
+                  max_gen=512, median=60.0, sigma=1.4, seed=2)
+        n_serve = 240
+    else:
+        kw = dict(n=512, cap_total=128, update=128, group_size=4,
+                  max_gen=8192, median=2000.0, sigma=1.5, seed=2)
+        n_serve = 2000
+    rows = []
+
+    # the static baselines on the identical workload (same length table,
+    # same starting capacity): the lockstep 4-replica fleet and the
+    # everything-on drain-pack fleet the autoscaled run must not lose to
+    st = run_replicas(num_replicas=4, async_step=True, **kw)
+    pk = run_replicas(num_replicas=4, async_step=True, drain_pack=True,
+                      kv_residency=True, **kw)
+    au = run_autoscaled(num_replicas=6, **kw)
+    rows.append(
+        f"autoscale/long_tail,{au['elapsed']*1e6:.0f},"
+        f"replica_bubble={au['replica_bubble_ratio']:.4f} "
+        f"window_bubble={au['end_window_bubble']:.4f} "
+        f"ups={au['scale_ups']:.0f} downs={au['scale_downs']:.0f} "
+        f"alive_end={au['alive_end']:.0f} "
+        f"static_elapsed={pk['elapsed']*1e6:.0f} "
+        f"tput={au['throughput_tok_per_s']:.0f}tok/s")
+
+    bq = run_burst_queue(n_arrivals=n_serve)
+    ti = bq["tenants"]["interactive"]
+    tb = bq["tenants"]["batch"]
+    rows.append(
+        f"autoscale/burst_queue,{bq['elapsed']*1e6:.0f},"
+        f"ups={bq['scale_ups']:.0f} downs={bq['scale_downs']:.0f} "
+        f"alive_end={bq['alive_end']:.0f} "
+        f"int_p99={ti['latency']['p99']*1e3:.1f}ms "
+        f"int_misses={ti['slo_misses']:.0f} "
+        f"completed={ti['completed'] + tb['completed']:.0f}")
+
+    if smoke:
+        # ISSUE 9 acceptance pins (see module docstring)
+        assert au["elapsed"] <= st["elapsed"], (au["elapsed"], st["elapsed"])
+        assert au["elapsed"] <= pk["elapsed"], (au["elapsed"], pk["elapsed"])
+        assert au["scale_ups"] > 0 and au["scale_downs"] > 0, au
+        assert au["end_window_bubble"] <= HIGH_WATER, \
+            (au["end_window_bubble"], HIGH_WATER)
+        assert au["updates"] == kw["n"] // kw["update"], au
+        # burst_queue: both directions fire, bounds hold, nothing is lost
+        assert bq["scale_ups"] > 0 and bq["scale_downs"] > 0, bq
+        assert (bq["min_replicas"] <= bq["alive_end"]
+                <= bq["max_replicas"]), bq
+        for name, t in bq["tenants"].items():
+            assert t["arrivals"] == t["completed"] + t["shed"], (name, t)
+    return rows
+
+
+if __name__ == "__main__":
+    for line in main(smoke=True):
+        print(line)

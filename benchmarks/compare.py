@@ -50,6 +50,11 @@ REQUIRED_SMOKE_ROWS = (
     # the serving tier's acceptance pin: slo_aware p99 strictly below
     # fifo on the shared bursty trace (asserted inside bench_serving)
     "serving/poisson_2tenant", "serving/bursty_slo",
+    # feedback-driven autoscaling pins: autoscaled wall-clock <= the
+    # static 4-replica fleets, both scale directions fire, and the end
+    # windowed bubble sits under the bubble_target high-water mark
+    # (asserted inside bench_autoscale)
+    "autoscale/long_tail", "autoscale/burst_queue",
 )
 
 

@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   replicas/*          EngineGroup data-parallel rollout: bubble vs replicas
   overlap/*           rollout/update overlap: serialized vs streaming trainer
   serving/*           always-on serving tier: multi-tenant admission rows
+  autoscale/*         feedback-driven fleet autoscaling: scale events from
+                      windowed bubble / queue-depth signals
   fig3_logic_rl/*     real RL token-efficiency on K&K (Fig. 3, quick mode)
   roofline_table/*    per (arch x shape) roofline terms (§Roofline)
 
@@ -95,9 +97,10 @@ def json_path_from_argv(argv) -> str:
 
 
 def main() -> None:
-    from benchmarks import (bench_ablation, bench_breakdown, bench_logic_rl,
-                            bench_overlap, bench_prefix_share, bench_replicas,
-                            bench_serving, bench_throughput, roofline)
+    from benchmarks import (bench_ablation, bench_autoscale, bench_breakdown,
+                            bench_logic_rl, bench_overlap, bench_prefix_share,
+                            bench_replicas, bench_serving, bench_throughput,
+                            roofline)
     json_path = json_path_from_argv(sys.argv)
     smoke = "--smoke" in sys.argv
     if smoke:
@@ -111,6 +114,7 @@ def main() -> None:
                     ("replicas", lambda: bench_replicas.main(smoke=True)),
                     ("overlap", lambda: bench_overlap.main(smoke=True)),
                     ("serving", lambda: bench_serving.main(smoke=True)),
+                    ("autoscale", lambda: bench_autoscale.main(smoke=True)),
                     ("quickstart", lambda: [quickstart_smoke_row()]))
     else:
         sections = (("breakdown", bench_breakdown.main),
@@ -120,6 +124,7 @@ def main() -> None:
                     ("replicas", bench_replicas.main),
                     ("overlap", bench_overlap.main),
                     ("serving", bench_serving.main),
+                    ("autoscale", bench_autoscale.main),
                     ("quickstart", lambda: [quickstart_smoke_row()]),
                     ("roofline", roofline.main))
     rows = []

@@ -245,6 +245,8 @@ class RolloutMetrics:
     rerolled_entries: int = 0       # entries released for a re-roll (no
                                     # survivor could take them)
     scale_events: int = 0           # elastic scale_down + scale_up calls
+    residency_dropped: int = 0      # resident KV released with no survivor
+                                    # pool to take it (re-prefill on resume)
     # serving-tier per-tenant accounting (empty outside serving runs)
     tenants: Dict[str, TenantStat] = dataclasses.field(default_factory=dict)
 
@@ -290,6 +292,8 @@ class RolloutMetrics:
                                     int(stats.get("rerolled_entries", 0)))
         self.scale_events = max(self.scale_events,
                                 int(stats.get("scale_events", 0)))
+        self.residency_dropped = max(self.residency_dropped,
+                                     int(stats.get("residency_dropped", 0)))
         if "replica_busy" in stats:
             self.replica_busy = float(stats["replica_busy"])
         if "replica_bubble_ratio" in stats:
@@ -350,6 +354,7 @@ class RolloutMetrics:
         self.rehomed_entries += other.rehomed_entries
         self.rerolled_entries += other.rerolled_entries
         self.scale_events += other.scale_events
+        self.residency_dropped += other.residency_dropped
         self.replica_busy = max(self.replica_busy, other.replica_busy)
         self.replica_bubble_ratio = max(self.replica_bubble_ratio,
                                         other.replica_bubble_ratio)
@@ -393,6 +398,7 @@ class RolloutMetrics:
             "rehomed_entries": self.rehomed_entries,
             "rerolled_entries": self.rerolled_entries,
             "scale_events": self.scale_events,
+            "residency_dropped": self.residency_dropped,
             "replica_busy": round(self.replica_busy, 3),
             "replica_bubble_ratio": round(self.replica_bubble_ratio, 4),
         }

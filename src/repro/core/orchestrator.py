@@ -133,7 +133,8 @@ class RolloutOrchestrator:
     def __init__(self, engine: EngineProtocol, buffer: StatefulRolloutBuffer,
                  cfg: SortedRLConfig, policy: SchedulerPolicy,
                  train_fn: "TrainFn | object",
-                 metrics: Optional[RolloutMetrics] = None):
+                 metrics: Optional[RolloutMetrics] = None,
+                 autoscaler: Optional[object] = None):
         from repro.rl.trainer_api import as_trainer
         self.engine = engine
         self.buffer = buffer
@@ -165,6 +166,16 @@ class RolloutOrchestrator:
         # fault-tolerant groups surface uids whose replica died without a
         # survivor able to take them; the orchestrator re-rolls those
         self._take_failed = getattr(engine, "take_failed_uids", None)
+        # feedback-driven fleet control (repro.rollout.autoscaler): the
+        # controller is ticked once per engine step, observing windowed
+        # group metrics and driving scale_down/scale_up itself
+        self.autoscaler = autoscaler
+        if autoscaler is not None:
+            if not (hasattr(engine, "scale_down")
+                    and getattr(engine, "elastic", False)):
+                raise ValueError(
+                    "autoscaler requires an elastic EngineGroup "
+                    "(EngineGroup(..., elastic=True)) as the engine")
 
     def snapshot(self) -> MetricsSnapshot:
         """The run's typed observability record (see MetricsSnapshot)."""
@@ -243,11 +254,33 @@ class RolloutOrchestrator:
         self.metrics.record(len(events), dt, new_tokens=len(events))
         if self._cache_stats is not None:
             self.metrics.record_cache(self._cache_stats())
+        # autoscale BEFORE the re-roll drain: a scale_down that re-rolls
+        # entries parks their uids in the group's failed list, and the
+        # drain below scavenges them back to PENDING in the same step
+        self._autoscale_tick()
         if self._take_failed is not None:
             self._reroll_failed()
         if self._overlap:
             # in-flight weight sync: completed updates land mid-rollout
             self._drain_trainer(flush=False)
+
+    def _autoscale_queue_stats(self) -> tuple:
+        """(queue_backlog, oldest_wait, slo_pressure) — backlog pressure
+        for the autoscaler's serving signals.  The base orchestrator has
+        no ingress, so there is never a backlog; ServingOrchestrator
+        overrides this with per-tenant head ages vs SLO deadlines."""
+        return 0, 0.0, 0.0
+
+    def _autoscale_tick(self) -> None:
+        asc = self.autoscaler
+        if asc is None:
+            return
+        backlog, oldest, pressure = self._autoscale_queue_stats()
+        asc.tick(self.engine,
+                 pending=len(self.buffer.pending()),
+                 running=len(self.buffer.running()),
+                 queue_backlog=backlog, oldest_wait=oldest,
+                 slo_pressure=pressure)
 
     def _reroll_failed(self) -> None:
         """Entries whose replica died without re-homing: their engine-side
@@ -279,9 +312,13 @@ class RolloutOrchestrator:
         return interrupted
 
     def rollout_until_harvest(self) -> None:
-        threshold = min(self.cfg.resolved_threshold(),
-                        len(self.buffer.unconsumed()))
         while True:
+            # recomputed every iteration: admitting policies (pipelined
+            # lookahead, serving ingress) grow the unconsumed set
+            # mid-loop, and a threshold frozen at entry would hand
+            # harvest_now a stale cap for the rest of the epoch
+            threshold = min(self.cfg.resolved_threshold(),
+                            len(self.buffer.unconsumed()))
             self._fill_engine()
             if not self.engine.active_uids():
                 break

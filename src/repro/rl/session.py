@@ -167,6 +167,20 @@ class SessionConfig:
     # num_replicas > 1 (faults are injected per replica)
     fault_plan: Optional[List[Any]] = None
     elastic: bool = False             # enable scale_up / scale_down
+    # feedback-driven autoscaling (repro.rollout.autoscaler): name an
+    # AutoscalerPolicy ("bubble_target" | "queue_depth") and the session
+    # builds an elastic EngineGroup plus an Autoscaler controller that
+    # drives scale_down/scale_up from windowed metrics each group step.
+    # scale_up mints warm replicas through the same per-replica builder
+    # (rollout_batch // num_replicas slots each, synced to the group's
+    # weight version); max_replicas=None caps the fleet at its starting
+    # size (shed-and-regrow only — growth beyond it is opt-in).
+    autoscaler: Optional[str] = None
+    autoscaler_kwargs: Dict[str, Any] = dataclasses.field(
+        default_factory=dict)         # policy knobs (high/low marks, ...)
+    autoscaler_window: float = 1.0    # metrics window span, sim seconds
+    min_replicas: int = 1             # never shed below this
+    max_replicas: Optional[int] = None  # never grow above this
     mode: Mode = Mode.ON_POLICY
     rollout_batch: int = 32           # engine capacity (slots)
     group_size: int = 2
@@ -279,19 +293,26 @@ class RLSession:
         evals: List[Dict] = []
         sched_history: List[Dict] = []
 
+        # the per-replica builder is kept for the autoscaler's replica
+        # factory: scale_up mints warm replicas through the same closure
+        # that built the starting fleet (same shard size, seed offset by
+        # the new index)
+        replica_builder: List[Any] = [None]
+
         def replicated(build_one):
             """`rollout_batch` slots as one engine or an EngineGroup of
             `num_replicas` equal shards (each with its own KV memory)."""
+            replica_builder[0] = build_one
             n = cfg.num_replicas
             if n < 1 or cfg.rollout_batch % n != 0:
                 raise ValueError(
                     f"rollout_batch={cfg.rollout_batch} must split evenly "
                     f"over num_replicas={n}")
-            if n == 1:
-                if cfg.fault_plan:
-                    raise ValueError(
-                        "fault_plan requires num_replicas > 1 (faults are "
-                        "injected per replica of an EngineGroup)")
+            if n == 1 and cfg.fault_plan:
+                raise ValueError(
+                    "fault_plan requires num_replicas > 1 (faults are "
+                    "injected per replica of an EngineGroup)")
+            if n == 1 and not cfg.autoscaler:
                 return build_one(0, cfg.rollout_batch)
             injector = (FaultInjector(cfg.fault_plan)
                         if cfg.fault_plan else None)
@@ -300,8 +321,23 @@ class RLSession:
                                async_step=cfg.async_step,
                                drain_pack=cfg.drain_pack or None,
                                fault_injector=injector,
-                               elastic=cfg.elastic,
+                               elastic=cfg.elastic or bool(cfg.autoscaler),
                                spread_tenants=cfg.arrival is not None)
+
+        def build_autoscaler():
+            if not cfg.autoscaler:
+                return None
+            from repro.rollout.autoscaler import Autoscaler
+            build_one = replica_builder[0]
+            shard = cfg.rollout_batch // max(1, cfg.num_replicas)
+            return Autoscaler(
+                cfg.autoscaler,
+                factory=lambda idx: build_one(idx, shard),
+                min_replicas=cfg.min_replicas,
+                max_replicas=(cfg.max_replicas if cfg.max_replicas
+                              is not None else cfg.num_replicas),
+                window=cfg.autoscaler_window,
+                policy_kwargs=cfg.autoscaler_kwargs)
 
         def make_orchestrator(engine, train_fn) -> RolloutOrchestrator:
             """Epoch-driven orchestrator, or — when `arrival` is set —
@@ -316,7 +352,8 @@ class RLSession:
                 update_cost_per_token=cfg.update_cost_per_token)
             if cfg.arrival is None:
                 return RolloutOrchestrator(engine, buffer, scfg, policy,
-                                           front)
+                                           front,
+                                           autoscaler=build_autoscaler())
             from repro.serve import (Ingress, ServingOrchestrator,
                                      ServingPolicy, coerce_specs,
                                      make_arrivals)
@@ -351,7 +388,8 @@ class RLSession:
                 tick = 0.05
             return ServingOrchestrator(engine, buffer, scfg,
                                        serving_policy, front,
-                                       ingress=ingress, tick=tick)
+                                       ingress=ingress, tick=tick,
+                                       autoscaler=build_autoscaler())
 
         if cfg.engine == "slot":
             model = build_model(tiny_lm_config(len(vocab), cfg.d_model,

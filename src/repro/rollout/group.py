@@ -347,6 +347,7 @@ class EngineGroup:
         self.rehomed_entries = 0               # migrated off a dying replica
         self.rerolled_entries = 0              # released: no survivor took it
         self.scale_events = 0                  # scale_down + scale_up calls
+        self.residency_dropped = 0             # resident KV released unread
 
     # -- protocol: time & slot queries ------------------------------------
 
@@ -409,20 +410,29 @@ class EngineGroup:
         seq = list(entry.prompt) + list(entry.generated)
         return tuple(seq[:-1])
 
-    def _drop_donor_residency(self, replica: int, uid: int) -> None:
+    def _drop_donor_residency(self, replica: int, uid: int) -> bool:
         """Abandoned resident state is dead weight on the donor replica —
         release it explicitly (paged pool pages, or the simulator's
         modeled residency) instead of letting it crowd the pool until LRU
-        pressure reaches it."""
+        pressure reaches it.  Returns True (and counts it in the
+        ``residency_dropped`` gauge) when something was actually held:
+        losing resident KV means the uid re-prefills from scratch on its
+        next run, a cost the fleet operator should be able to see."""
         if not self.alive[replica]:
-            return                      # fenced: nothing resident to drop
+            return False                # fenced: nothing resident to drop
         r = self.replicas[replica]
+        dropped = False
         kv = getattr(r, "kv", None)
         if kv is not None:
+            if uid in kv.tables:
+                dropped = True
             kv.release_seq(uid)
         drop = getattr(r, "drop_resident", None)
-        if drop is not None:
-            drop(uid)
+        if drop is not None and drop(uid):
+            dropped = True
+        if dropped:
+            self.residency_dropped += 1
+        return dropped
 
     def _remember_home(self, uid: int, replica: int) -> None:
         """Record the uid's home (insertion order doubles as recency) and
@@ -865,6 +875,13 @@ class EngineGroup:
                 if dst != i and self._migrate(uid, i, dst):
                     self._remember_home(uid, dst)
                     break
+            else:
+                # no survivor pool accepted: the pages are gone either
+                # way, but release them explicitly (counted in
+                # residency_dropped) instead of letting the fence wipe
+                # them without trace — the uid re-prefills on resume
+                self._drop_donor_residency(i, uid)
+                del self._home[uid]
         self.alive[i] = False
         self.scale_events += 1
         self._fence(i)
@@ -1035,8 +1052,14 @@ class EngineGroup:
             "rehomed_entries": float(self.rehomed_entries),
             "rerolled_entries": float(self.rerolled_entries),
             "scale_events": float(self.scale_events),
+            "residency_dropped": float(self.residency_dropped),
             "replica_busy": self.replica_busy,
             "replica_bubble_ratio": self.replica_bubble_ratio,
+            # cumulative Eq. 4 integrals: windowed consumers (the
+            # autoscaler's MetricsWindow) difference successive snapshots
+            # to get bubble over a recent span rather than the whole run
+            "replica_busy_time": float(sum(self._busy_time)),
+            "replica_cap_time": float(sum(self._cap_time)),
         }
         subs = []
         for r in self.replicas:

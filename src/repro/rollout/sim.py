@@ -221,9 +221,13 @@ class SimEngine:
 
     # -- residency / cache surface (paged-engine-shaped) ------------------
 
-    def drop_resident(self, uid: int) -> None:
-        """Forget a uid's modeled residency (its warm KV is abandoned)."""
+    def drop_resident(self, uid: int) -> bool:
+        """Forget a uid's modeled residency (its warm KV is abandoned).
+        Returns whether anything was actually held, so callers (the
+        group's ``residency_dropped`` gauge) can count real losses."""
+        held = uid in self._resident
         self._resident.pop(uid, None)
+        return held
 
     def cache_stats(self) -> Dict[str, float]:
         """Prefill counters in the paged engine's cache_stats shape, so

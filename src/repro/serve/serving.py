@@ -58,8 +58,10 @@ class ServingOrchestrator(RolloutOrchestrator):
                  cfg: SortedRLConfig, policy: SchedulerPolicy,
                  train_fn: TrainFn, ingress: Optional[Ingress] = None,
                  metrics: Optional[RolloutMetrics] = None,
-                 tick: Optional[float] = None):
-        super().__init__(engine, buffer, cfg, policy, train_fn, metrics)
+                 tick: Optional[float] = None,
+                 autoscaler: Optional[object] = None):
+        super().__init__(engine, buffer, cfg, policy, train_fn, metrics,
+                         autoscaler=autoscaler)
         self.ingress = ingress if ingress is not None else getattr(
             policy, "ingress", None)
         assert self.ingress is not None, (
@@ -92,6 +94,25 @@ class ServingOrchestrator(RolloutOrchestrator):
             self._tick_now = max(self._tick_now, t)
         else:
             self._idle_skipped += max(0.0, t - self.now)
+
+    def _autoscale_queue_stats(self) -> tuple:
+        """Backlog pressure for the queue_depth autoscaler: total queued
+        requests, the oldest head wait, and the worst head wait as a
+        fraction of its tenant's latency SLO — ages measured on the
+        *serving* clock (arrivals live on it), not the engine clock."""
+        now = self.now
+        backlog, oldest, pressure = 0, 0.0, 0.0
+        for name, q in self.ingress.queues.items():
+            backlog += len(q)
+            head = q.head()
+            if head is None:
+                continue
+            wait = max(0.0, now - head.t_arrival)
+            oldest = max(oldest, wait)
+            slo = self.ingress.specs[name].latency_slo
+            if slo:
+                pressure = max(pressure, wait / slo)
+        return backlog, oldest, pressure
 
     # -- the loop ----------------------------------------------------------
 
@@ -199,8 +220,12 @@ class ServingOrchestrator(RolloutOrchestrator):
         # whose queued work COULD have filled those slots (equal split
         # across backlogged tenants); with no backlog the idle time is
         # nobody's fault — there was nothing to run
+        # count distinct busy slots, not events: async micro-steps emit
+        # >1 event per uid per group step, so len(events) overstates
+        # occupancy and clamps idle to 0, under-charging bubble_time
         dt = self.engine.clock - t0
-        idle = max(0, self.engine.capacity - len(events))
+        busy = len({ev.uid for ev in events})
+        idle = max(0, self.engine.capacity - busy)
         if idle and dt > 0:
             waiting = [n for n, q in ing.queues.items() if len(q)]
             if waiting:

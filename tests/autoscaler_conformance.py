@@ -1,0 +1,723 @@
+"""Autoscaler-conformance suite: the observe -> scale loop's contract.
+
+The :mod:`repro.rollout.autoscaler` controller turns the group's windowed
+Eq. 4 bubble (and the serving tier's backlog age) into actual
+``EngineGroup.scale_down``/``scale_up`` calls.  This suite pins:
+
+  * the policy registry contract (string names, protocol instances,
+    unknown-name errors) — mirroring the scheduler/balancer/admission
+    registry suites;
+  * controller mechanics in isolation: the fleet never drops below
+    ``min_replicas`` or grows past ``max_replicas``, ``confirm_steps``
+    hysteresis gates every action, ``cooldown`` spaces consecutive
+    actions on the group clock, and growth without a replica factory is
+    a no-op;
+  * warm scale_up: minted replicas join at the group's weight version,
+    mixed ``cap_total`` fleets route work onto the new replica
+    (``round_robin`` and ``weighted_tokens`` swept), and ``scale_up``
+    immediately after a kill restores capacity at the same fleet size;
+  * the full scheduling contract under autoscaling: conservation, the
+    group barrier, buffer invariants, and a drained fleet survive an
+    aggressively thrashing policy, replica-swept {2, 4} over the sorted
+    and pipelined schedulers — and the whole run is deterministic under
+    a fixed seed (identical event logs, token counts, clocks);
+  * signal-accounting regressions the loop exposed: the serving tier's
+    bubble attribution counts distinct busy slots (async micro-steps
+    emit >1 event per uid), ``rollout_until_harvest`` recomputes its
+    harvest threshold every iteration (mid-loop admission used to see a
+    stale cap), and ``scale_down`` releases unclaimed resident KV
+    through the ``residency_dropped`` gauge instead of silently fencing
+    it away;
+  * a chaos proptest interleaving autoscaler ticks with kill / stall /
+    scale faults on a real two-pool SlotEngine fleet: page-pool
+    invariants hold after every operation and fenced replicas hold
+    nothing (the fast sim-fleet variant runs in the seconds lane).
+"""
+import pytest
+
+from chaos_conformance import _fleet_invariants
+from engine_conformance import make_slot
+from policy_conformance import CAPACITY, GROUP, MAX_GEN, N_PROMPTS, prompts
+from proptest import cases, integers, lists, tuples
+from repro.core.buffer import BufferEntry, Mode, StatefulRolloutBuffer
+from repro.core.engine_api import FaultEvent, StepEvent
+from repro.core.metrics import RolloutMetrics
+from repro.core.orchestrator import (RolloutOrchestrator, SortedRLConfig,
+                                     UpdateRequest)
+from repro.core.policy import AdmitRequest, BasePolicy, make_policy
+from repro.rollout.autoscaler import (Autoscaler, AutoscalerPolicy,
+                                      MetricsWindow, available_autoscalers,
+                                      make_autoscaler)
+from repro.rollout.group import EngineGroup
+from repro.rollout.sim import SimEngine, lognormal_lengths
+from repro.serve import (BurstyArrivals, Ingress, ServingOrchestrator,
+                         ServingPolicy, TenantSpec, TraceArrivals)
+
+
+# -- fleet / policy helpers ---------------------------------------------------
+
+def make_sim(capacity=1, seed=0, max_gen=MAX_GEN, lengths=None, **kw):
+    if lengths is not None:
+        kw["length_table"] = lengths
+    else:
+        kw.setdefault("length_sampler",
+                      lognormal_lengths(median=3, sigma=0.8, max_len=max_gen))
+    kw.setdefault("kv_residency", True)
+    return SimEngine(capacity=capacity, max_gen_len=max_gen, seed=seed, **kw)
+
+
+def sim_fleet(n, capacity=1, max_gen=MAX_GEN, lengths=None, **kw):
+    kw.setdefault("migrate_kv", True)
+    return EngineGroup([make_sim(capacity=capacity, seed=i, max_gen=max_gen,
+                                 lengths=lengths) for i in range(n)],
+                       elastic=True, **kw)
+
+
+class ConstantPolicy:
+    """Minimal AutoscalerPolicy instance: a constant proposal — isolates
+    the controller's clamp / hysteresis / cooldown mechanics from any
+    signal logic."""
+    name = "constant"
+
+    def __init__(self, want: int):
+        self.want = want
+
+    def propose(self, view) -> int:
+        return self.want
+
+
+class SequencePolicy:
+    """Propose a scripted sequence (then hold 0) — drives the hysteresis
+    streak through exact reset scenarios."""
+    name = "sequence"
+
+    def __init__(self, seq):
+        self.seq = list(seq)
+        self.i = 0
+
+    def propose(self, view) -> int:
+        want = self.seq[self.i] if self.i < len(self.seq) else 0
+        self.i += 1
+        return want
+
+
+class ThrashPolicy:
+    """Alternate shed / grow every tick — the adversarial driver for the
+    scheduling-contract tests: maximum scale churn the controller will
+    permit, still deterministic."""
+    name = "thrash"
+
+    def __init__(self):
+        self.t = 0
+
+    def propose(self, view) -> int:
+        self.t += 1
+        if self.t % 2 and view.can_shed:
+            return -1
+        if view.can_grow:
+            return 1
+        return 0
+
+
+# -- registry contract --------------------------------------------------------
+
+def test_registry_lists_builtin_policies():
+    names = available_autoscalers()
+    assert "bubble_target" in names and "queue_depth" in names
+
+
+@pytest.mark.parametrize("name", ["bubble_target", "queue_depth"])
+def test_registry_builds_protocol_instances(name):
+    p = make_autoscaler(name)
+    assert isinstance(p, AutoscalerPolicy)
+    assert p.name == name
+
+
+def test_registry_unknown_name_raises_with_listing():
+    with pytest.raises(KeyError, match="bubble_target"):
+        make_autoscaler("nope")
+
+
+def test_controller_accepts_instance_and_kwargs():
+    asc = Autoscaler(ConstantPolicy(0))
+    assert asc.policy.name == "constant"
+    asc = Autoscaler("bubble_target",
+                     policy_kwargs=dict(high=0.7, low=0.2))
+    assert asc.policy.high == 0.7 and asc.policy.low == 0.2
+
+
+def test_metrics_window_deltas_and_fullness():
+    w = MetricsWindow(1.0)
+    assert not w.full and w.bubble() == 0.0
+    # cumulative integrals: 2 slots, busy half the time
+    for t, cap, busy in [(0.0, 0.0, 0.0), (0.5, 1.0, 0.5), (1.0, 2.0, 1.0)]:
+        w.push(t, {"replica_cap_time": cap, "replica_busy_time": busy})
+    assert w.full and w.covered == 1.0
+    assert w.bubble() == pytest.approx(0.5)
+    # old observations roll off; the newest out-of-span one stays as the
+    # delta base, so the window is the (1.0, 2.5] slice only
+    w.push(2.5, {"replica_cap_time": 5.0, "replica_busy_time": 3.5})
+    assert len(w) == 2 and w.covered >= w.span
+    assert w.bubble() == pytest.approx((5.0 - 2.0 - (3.5 - 1.0)) / 3.0)
+
+
+# -- controller mechanics -----------------------------------------------------
+
+@pytest.mark.parametrize("n,floor", [(2, 1), (4, 1), (4, 2)])
+def test_fleet_never_drops_below_min_replicas(n, floor):
+    eng = sim_fleet(n)
+    asc = Autoscaler(ConstantPolicy(-1), min_replicas=floor,
+                     cooldown=0.0, confirm_steps=1)
+    for _ in range(3 * n):
+        asc.tick(eng)
+        assert sum(eng.alive) >= floor
+    assert sum(eng.alive) == floor
+    assert len(asc.events) == n - floor
+    assert all(e.direction == -1 for e in asc.events)
+
+
+def test_fleet_never_grows_past_max_replicas():
+    eng = sim_fleet(2)
+    asc = Autoscaler(ConstantPolicy(+1), factory=lambda i: make_sim(seed=i),
+                     max_replicas=4, cooldown=0.0, confirm_steps=1)
+    for _ in range(8):
+        asc.tick(eng)
+        assert sum(eng.alive) <= 4
+    assert sum(eng.alive) == 4 and len(eng.replicas) == 4
+    assert len(asc.events) == 2
+    assert all(e.direction == +1 for e in asc.events)
+
+
+def test_grow_without_factory_is_a_noop():
+    eng = sim_fleet(2)
+    asc = Autoscaler(ConstantPolicy(+1), cooldown=0.0, confirm_steps=1)
+    for _ in range(4):
+        asc.tick(eng)
+    assert not asc.events and len(eng.replicas) == 2
+
+
+def test_confirm_steps_gates_every_action():
+    eng = sim_fleet(8)
+    asc = Autoscaler(ConstantPolicy(-1), cooldown=0.0, confirm_steps=3)
+    fired = [bool(asc.tick(eng)) for _ in range(6)]
+    # streak resets after each action: fire on ticks 3 and 6 only
+    assert fired == [False, False, True, False, False, True]
+
+
+@pytest.mark.parametrize("seq", [[-1, 0, -1, 0, -1, 0],
+                                 [-1, 1, -1, 1, -1, 1]])
+def test_streak_resets_on_zero_and_direction_flip(seq):
+    eng = sim_fleet(4)
+    asc = Autoscaler(SequencePolicy(seq), cooldown=0.0, confirm_steps=2,
+                     factory=lambda i: make_sim(seed=i))
+    for _ in seq:
+        asc.tick(eng)
+    assert not asc.events, \
+        "an interrupted streak must never reach confirm_steps"
+
+
+def test_cooldown_spaces_actions_on_the_group_clock():
+    # one long entry keeps the clock advancing; idle peers are shed but
+    # never faster than one action per cooldown span
+    eng = sim_fleet(6, lengths={0: 40})
+    eng.submit([BufferEntry(uid=0, prompt=[1, 2, 3])], version=0)
+    cooldown = 0.09
+    asc = Autoscaler(ConstantPolicy(-1), min_replicas=1,
+                     cooldown=cooldown, confirm_steps=1)
+    for _ in range(40):
+        if not eng.active_uids():
+            break
+        eng.step()
+        asc.tick(eng)
+    assert len(asc.events) >= 2, "the clock advanced; sheds must fire"
+    times = [e.t for e in asc.events]
+    for a, b in zip(times, times[1:]):
+        assert b - a >= cooldown - 1e-9, (times, cooldown)
+
+
+def test_shed_skips_undrainable_fleets():
+    # every live slot busy and no survivor headroom: no drainable victim
+    eng = sim_fleet(2, capacity=2, lengths={u: 30 for u in range(4)})
+    eng.submit([BufferEntry(uid=u, prompt=[1, 2, 3]) for u in range(4)],
+               version=0)
+    asc = Autoscaler(ConstantPolicy(-1), cooldown=0.0, confirm_steps=1)
+    for _ in range(4):
+        eng.step()
+        asc.tick(eng)
+    assert not asc.events and sum(eng.alive) == 2, \
+        "shedding a full fleet would re-roll live work for nothing"
+
+
+# -- warm scale_up: version sync, mixed capacity, routing ---------------------
+
+def drain(eng, buf=None):
+    done, steps = [], 0
+    while eng.active_uids():
+        for ev in eng.step():
+            if buf is not None:
+                buf.record_tokens(ev.uid, [ev.token], [ev.logprob], 0)
+            if ev.done:
+                done.append(ev.uid)
+        steps += 1
+        assert steps < 500
+    return done
+
+
+def test_scale_up_mints_warm_mixed_capacity_replica():
+    eng = sim_fleet(2, capacity=2)
+    eng.sync_weights(3)
+    asc = Autoscaler(ConstantPolicy(+1), cooldown=0.0, confirm_steps=1,
+                     factory=lambda i: make_sim(capacity=5, seed=10 + i),
+                     max_replicas=3)
+    ev = asc.tick(eng)
+    assert ev is not None and ev.direction == +1 and ev.replica == 2
+    new = eng.replicas[2]
+    assert new.capacity == 5, "mixed cap_total fleets are allowed"
+    assert new.version == 3, "minted replicas join at the group version"
+    assert eng.capacity == 9 and eng.free_slots() == 9
+    # the grown, heterogeneous fleet still takes and finishes a full wave
+    wave = [BufferEntry(uid=u, prompt=[1, 2, 3]) for u in range(9)]
+    eng.submit(wave, version=3)
+    assert eng.free_slots() == 0
+    assert sorted(drain(eng)) == list(range(9))
+
+
+@pytest.mark.parametrize("balancer", ["round_robin", "weighted_tokens"])
+def test_routing_spreads_across_grown_fleet(balancer):
+    eng = sim_fleet(2, capacity=2, balancer=balancer)
+    asc = Autoscaler(ConstantPolicy(+1), cooldown=0.0, confirm_steps=1,
+                     factory=lambda i: make_sim(capacity=2, seed=10 + i),
+                     max_replicas=3)
+    asc.tick(eng)
+    assert len(eng.replicas) == 3
+    eng.submit([BufferEntry(uid=u, prompt=[1, 2, 3]) for u in range(6)],
+               version=0)
+    for i in range(3):
+        assert eng.replicas[i].active_uids(), \
+            f"{balancer} left grown replica {i} idle under a full wave"
+    assert sorted(drain(eng)) == list(range(6))
+
+
+def test_scale_up_after_kill_restores_same_fleet_size():
+    eng = sim_fleet(2, capacity=2, lengths={u: 6 for u in range(4)})
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    uids = buf.load_prompts([[1, 2, 3, 4 + i] for i in range(4)])
+    buf.mark_running(uids)
+    eng.submit(buf.running(), version=0)
+    eng.step()
+    eng._apply_fault(FaultEvent(step=1, replica=1, kind="kill"))
+    assert sum(eng.alive) == 1
+    idx = eng.scale_up(make_sim(capacity=2, seed=9,
+                                lengths={u: 6 for u in range(4)}))
+    assert idx == 2 and sum(eng.alive) == 2, \
+        "scale_up right after a kill restores the fleet size"
+    assert eng.capacity == 4
+    # the kill's orphans resubmit (rehomed-resident or re-rolled) and the
+    # whole wave still completes exactly once on the reshaped fleet
+    for uid in eng.take_failed_uids():
+        buf.scavenge(uid)
+    resubmit = buf.pending()
+    if resubmit:
+        buf.mark_running([e.uid for e in resubmit])
+        eng.submit(resubmit, version=0)
+    done = drain(eng, buf)
+    assert sorted(done) == sorted(uids)
+    assert not eng.replicas[1].active_uids(), "fenced replica holds nothing"
+    st = eng.cache_stats()
+    assert st["replica_deaths"] == 1.0 and st["scale_events"] >= 1.0
+
+
+# -- the scheduling contract under autoscaling, replica-swept -----------------
+
+_DRIVE_CACHE = {}
+
+
+def autoscaled_drive(policy_name, n_replicas, seed=0):
+    key = (policy_name, n_replicas, seed)
+    if key not in _DRIVE_CACHE:
+        _DRIVE_CACHE[key] = _autoscaled_drive(policy_name, n_replicas, seed)
+    return _DRIVE_CACHE[key]
+
+
+def _autoscaled_drive(policy_name, n_replicas, seed, n_groups=2):
+    cap = CAPACITY // n_replicas
+
+    def mk(i):
+        return SimEngine(capacity=cap, max_gen_len=MAX_GEN, seed=seed + i,
+                         kv_residency=True,
+                         length_sampler=lognormal_lengths(
+                             median=3, sigma=0.8, max_len=MAX_GEN))
+
+    eng = EngineGroup([mk(i) for i in range(n_replicas)],
+                      migrate_kv=True, elastic=True)
+    asc = Autoscaler(ThrashPolicy(), factory=mk, min_replicas=1,
+                     max_replicas=n_replicas + 2, window=0.05,
+                     cooldown=0.0, confirm_steps=1)
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    cfg = SortedRLConfig(mode=Mode.PARTIAL, rollout_batch=CAPACITY,
+                         group_size=GROUP, update_batch=CAPACITY,
+                         max_gen_len=MAX_GEN)
+    batches = []
+
+    def train_fn(req: UpdateRequest):
+        batches.append((list(req.entries), req.group_epoch))
+
+    orch = RolloutOrchestrator(eng, buf, cfg, make_policy(policy_name),
+                               train_fn, autoscaler=asc)
+    if policy_name == "pipelined":
+        for g in range(n_groups):
+            orch.policy.queue_group(prompts(N_PROMPTS, start=g))
+        orch.run_queued()
+    else:
+        for g in range(n_groups):
+            orch.run_group(prompts(N_PROMPTS, start=g))
+    return orch, batches, asc, n_groups * N_PROMPTS
+
+
+@pytest.fixture(params=["sorted", "pipelined"])
+def sched_name(request):
+    return request.param
+
+
+@pytest.fixture(params=[2, 4])
+def n_replicas(request):
+    return request.param
+
+
+def test_autoscaled_conservation(sched_name, n_replicas):
+    """Scale churn loses no uid and duplicates none — and the thrashing
+    policy did churn the fleet."""
+    orch, batches, asc, loaded = autoscaled_drive(sched_name, n_replicas)
+    assert asc.events, "the thrash policy must actually drive scale events"
+    uids = [e.uid for b, _ in batches for e in b]
+    assert len(uids) == len(set(uids)), "an entry trained twice"
+    assert sorted(uids) == list(range(loaded))
+
+
+def test_autoscaled_group_barrier(sched_name, n_replicas):
+    orch, batches, _, _ = autoscaled_drive(sched_name, n_replicas)
+    lifecycles = [e.lifecycle for b, _ in batches for e in b]
+    assert lifecycles == sorted(lifecycles), \
+        "a scale event let a later group train before an earlier one"
+    if orch.policy.strict_group_barrier:
+        for b, epoch in batches:
+            assert all(e.lifecycle == epoch for e in b)
+
+
+def test_autoscaled_fleet_drains_within_bounds(sched_name, n_replicas):
+    orch, _, asc, _ = autoscaled_drive(sched_name, n_replicas)
+    orch.buffer.check_invariants()
+    assert orch.buffer.group_clear()
+    assert orch.engine.free_slots() == orch.engine.capacity
+    assert asc.min_replicas <= sum(orch.engine.alive)
+    assert sum(orch.engine.alive) <= asc.max_replicas
+    for i, r in enumerate(orch.engine.replicas):
+        if not orch.engine.alive[i]:
+            assert not r.active_uids(), "fenced replica still holds work"
+
+
+def test_autoscaled_run_is_deterministic():
+    a = _autoscaled_drive("sorted", 2, seed=7)
+    b = _autoscaled_drive("sorted", 2, seed=7)
+    assert a[2].events == b[2].events, "scale-event logs must reproduce"
+    assert [[e.uid for e in bt] for bt, _ in a[1]] == \
+           [[e.uid for e in bt] for bt, _ in b[1]]
+    assert a[0].engine.clock == b[0].engine.clock
+    assert a[0].metrics.tokens_generated == b[0].metrics.tokens_generated
+
+
+# -- the builtin signals end to end -------------------------------------------
+
+def test_bubble_target_sheds_the_drain_tail_to_the_floor():
+    """One straggler past a short bulk: the windowed bubble crosses the
+    high-water mark during the drain and the controller sheds every idle
+    replica down to min_replicas — while all work still trains.  Eq. 4
+    counts idle slots on *running* replicas, so the replicas need spare
+    capacity (cap 2, one straggler) for the signal to register."""
+    lengths = {0: 12, 1: 2, 2: 2, 3: 2}
+    eng = sim_fleet(4, capacity=2, max_gen=16, lengths=lengths)
+    asc = Autoscaler("bubble_target", min_replicas=1, window=0.1,
+                     cooldown=0.0, confirm_steps=1,
+                     policy_kwargs=dict(high=0.3, low=0.0))
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    cfg = SortedRLConfig(mode=Mode.PARTIAL, rollout_batch=4, group_size=2,
+                         update_batch=4, max_gen_len=16)
+    batches = []
+    orch = RolloutOrchestrator(eng, buf, cfg, make_policy("sorted"),
+                               lambda req: batches.append(list(req.entries)),
+                               autoscaler=asc)
+    orch.run_group([[1, 1, 1, 2 + i] for i in range(4)])
+    downs = [e for e in asc.events if e.direction < 0]
+    assert downs, "the drain tail must trigger sheds"
+    assert all(e.window_bubble >= 0.3 for e in downs)
+    assert sum(eng.alive) == 1, "idle replicas shed to the floor"
+    assert sorted(e.uid for b in batches for e in b) == [0, 1, 2, 3]
+
+
+def test_bubble_target_grows_under_starved_pending_work():
+    def mk(i):
+        return make_sim(capacity=2, seed=i, max_gen=8,
+                        lengths={u: 6 for u in range(6)})
+
+    eng = EngineGroup([mk(0)], elastic=True, migrate_kv=True)
+    asc = Autoscaler("bubble_target", factory=mk, max_replicas=3,
+                     window=0.5, cooldown=0.0, confirm_steps=2)
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    cfg = SortedRLConfig(mode=Mode.PARTIAL, rollout_batch=6, group_size=2,
+                         update_batch=6, max_gen_len=8)
+    batches = []
+    orch = RolloutOrchestrator(eng, buf, cfg, make_policy("sorted"),
+                               lambda req: batches.append(list(req.entries)),
+                               autoscaler=asc)
+    orch.run_group([[1, 1, 1, 2 + i] for i in range(6)])
+    ups = [e for e in asc.events if e.direction > 0]
+    assert ups, "pending work starved of slots on a hot fleet must grow it"
+    assert len(eng.replicas) > 1
+    assert sorted(e.uid for b in batches for e in b) == list(range(6))
+
+
+def test_queue_depth_scales_serving_fleet_and_conserves_requests():
+    def mk(i):
+        return SimEngine(capacity=2, max_gen_len=64, seed=3 + i,
+                         length_sampler=lognormal_lengths(
+                             median=8.0, sigma=1.0, max_len=64))
+
+    eng = EngineGroup([mk(0), mk(1)], elastic=True)
+    asc = Autoscaler("queue_depth", factory=mk, min_replicas=1,
+                     max_replicas=4, window=1.0, cooldown=0.5,
+                     policy_kwargs=dict(wait_frac=0.5, target_wait=2.0,
+                                        idle_bubble=0.5))
+    tenants = (TenantSpec("batch", weight=1.0, queue_capacity=512),
+               TenantSpec("interactive", weight=8.0, latency_slo=1.0,
+                          queue_capacity=512))
+    ingress = Ingress(tenants, BurstyArrivals(
+        {"batch": 120.0, "interactive": 15.0}, seed=11,
+        on_time=0.3, off_time=0.7))
+    policy = ServingPolicy(inner="sorted", admission="slo_aware",
+                           ingress=ingress)
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    cfg = SortedRLConfig(mode=Mode.PARTIAL, rollout_batch=4, group_size=1,
+                         update_batch=4, max_gen_len=64)
+    orch = ServingOrchestrator(eng, buf, cfg, policy, lambda req: None,
+                               autoscaler=asc)
+    orch.run_for(n_arrivals=80)
+    assert any(e.direction > 0 for e in asc.events), \
+        "backlog age under SLO pressure must add replicas"
+    assert 1 <= sum(eng.alive) <= 4
+    for name, t in orch.metrics.tenant_summary().items():
+        assert t["arrivals"] == t["completed"] + t["shed"], (name, t)
+
+
+def test_session_wires_autoscaler_and_replica_factory():
+    from repro.rl.session import RLSession, SessionConfig
+    cfg = SessionConfig(task="logic", policy="sorted", engine="sim",
+                        num_replicas=2, rollout_batch=8, update_batch=8,
+                        group_size=2, n_groups=1, mode=Mode.PARTIAL,
+                        max_gen_len=32, autoscaler="bubble_target",
+                        autoscaler_kwargs={"high": 0.6},
+                        autoscaler_window=0.5, min_replicas=1,
+                        max_replicas=4)
+    sess = RLSession.from_config(cfg)
+    asc = sess.orchestrator.autoscaler
+    assert asc is not None and asc.policy.name == "bubble_target"
+    assert asc.policy.high == 0.6
+    assert asc.min_replicas == 1 and asc.max_replicas == 4
+    assert asc.window.span == 0.5
+    assert sess.engine.elastic, "an autoscaler implies an elastic group"
+    # the factory mints warm shard-sized replicas through the same
+    # closure that built the starting fleet
+    minted = asc.factory(len(sess.engine.replicas))
+    assert minted.capacity == cfg.rollout_batch // cfg.num_replicas
+    sess.run()          # the wired session still trains end to end
+
+
+def test_session_autoscaler_forces_group_even_for_one_replica():
+    from repro.rl.session import RLSession, SessionConfig
+    cfg = SessionConfig(task="logic", engine="sim", num_replicas=1,
+                        rollout_batch=8, update_batch=8, n_groups=1,
+                        max_gen_len=32, autoscaler="bubble_target")
+    sess = RLSession.from_config(cfg)
+    assert isinstance(sess.engine, EngineGroup), \
+        "scaling needs a group: a bare engine cannot add replicas"
+    assert sess.engine.elastic
+    assert sess.orchestrator.autoscaler.max_replicas == 1
+
+
+# -- signal-accounting regression pins ----------------------------------------
+
+def test_serving_bubble_counts_distinct_busy_slots():
+    """Async micro-steps emit >1 event per uid per group step; the bubble
+    attribution must count distinct busy slots, not events, or idle time
+    clamps to zero and tenants are never charged."""
+    eng = EngineGroup([SimEngine(capacity=2, max_gen_len=8, seed=i)
+                       for i in range(2)], async_step=True)
+    ingress = Ingress((TenantSpec("batch", queue_capacity=8),),
+                      TraceArrivals([(0.0, "batch", [1, 2, 3])]))
+    policy = ServingPolicy(inner="sorted", admission="fifo", ingress=ingress)
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    cfg = SortedRLConfig(mode=Mode.PARTIAL, rollout_batch=4, group_size=1,
+                         update_batch=4, max_gen_len=8)
+    orch = ServingOrchestrator(eng, buf, cfg, policy, lambda req: None)
+    ingress.pump(0.0)                     # a queued, unadmitted arrival
+    assert sum(len(q) for q in ingress.queues.values()) == 1
+    uid = buf.load_prompts([[1, 2, 3]])[0]
+    buf.mark_running([uid])
+    ev = StepEvent(uid=uid, token=1, logprob=0.0, done=False)
+    # 3 catch-up events for ONE busy slot over 1s of group clock: the
+    # other 3 of 4 slots idled while the batch tenant had queued work
+    orch._apply_events([ev, ev, ev], t0=eng.clock - 1.0)
+    assert orch.metrics.tenant("batch").bubble_time == pytest.approx(3.0)
+
+
+class MidloopAdmitPolicy(BasePolicy):
+    """Admits a second wave after the first decode step and records the
+    harvest threshold every harvest_now sees — the stale-threshold pin."""
+    name = "midloop_admit"
+
+    def __init__(self):
+        self.admitted = False
+        self.stepped = False
+        self.seen = []
+
+    def admit_next_group(self, view):
+        if self.admitted or not self.stepped:
+            return None
+        self.admitted = True
+        return AdmitRequest(prompts=prompts(N_PROMPTS, start=1))
+
+    def harvest_now(self, view) -> bool:
+        self.stepped = True
+        self.seen.append(view.harvest_threshold)
+        return False
+
+
+def test_harvest_threshold_tracks_midloop_admission():
+    """rollout_until_harvest must recompute its threshold every iteration:
+    a policy that admits mid-loop (pipelined lookahead, serving ingress)
+    grows the unconsumed set, and a threshold frozen at loop entry would
+    cap harvests at the stale pre-admission count for the whole epoch."""
+    eng = make_sim(capacity=4)
+    buf = StatefulRolloutBuffer(Mode.PARTIAL)
+    cfg = SortedRLConfig(mode=Mode.PARTIAL, rollout_batch=CAPACITY,
+                         group_size=GROUP, update_batch=2 * N_PROMPTS,
+                         max_gen_len=MAX_GEN)
+    policy = MidloopAdmitPolicy()
+    orch = RolloutOrchestrator(eng, buf, cfg, policy, lambda req: None)
+    orch.run_group(prompts(N_PROMPTS))
+    assert policy.admitted
+    assert policy.seen[0] == N_PROMPTS
+    assert max(policy.seen) == 2 * N_PROMPTS, \
+        "the threshold must catch up to mid-loop admission"
+
+
+def test_scale_down_releases_unclaimed_residency():
+    """Resident KV no survivor accepts is released explicitly and counted
+    in the residency_dropped gauge — not silently wiped by the fence."""
+    eng = sim_fleet(2, capacity=1)
+    eng.submit([BufferEntry(uid=0, prompt=[1, 2, 3])], version=0)
+    home = eng._home[0]
+    eng.interrupt([0])                   # uid 0 parks as resident KV
+    survivor = 1 - home
+    eng.replicas[survivor].import_entry = lambda handle: False
+    eng.scale_down(home)
+    assert eng.residency_dropped == 1
+    assert 0 not in eng._home
+    assert eng.cache_stats().get("residency_dropped") == 1.0
+    # the gauge flows through the orchestrator metrics unchanged
+    m = RolloutMetrics(capacity=eng.capacity)
+    m.record_cache(eng.cache_stats())
+    assert m.residency_dropped == 1
+    assert m.snapshot().get("residency_dropped") == 1
+
+
+def test_drop_donor_residency_counts_only_real_losses():
+    eng = sim_fleet(2, capacity=1)
+    eng.submit([BufferEntry(uid=0, prompt=[1, 2, 3])], version=0)
+    home = eng._home[0]
+    eng.interrupt([0])
+    assert eng._drop_donor_residency(home, 0) is True
+    assert eng._drop_donor_residency(home, 0) is False, \
+        "a second drop holds nothing and must not double-count"
+    assert eng._drop_donor_residency(home, 99) is False
+    assert eng.residency_dropped == 1
+
+
+# -- chaos proptest: autoscaler ticks under fault interleavings ---------------
+
+def _tick_op(asc, eng, usel):
+    asc.tick(eng, pending=usel % 3, running=len(eng.active_uids()))
+
+
+def _chaos_autoscaled(eng, mk_replica, ops, invariants):
+    asc = Autoscaler(ThrashPolicy(), factory=mk_replica, min_replicas=1,
+                     max_replicas=4, window=0.05, cooldown=0.0,
+                     confirm_steps=1)
+    next_uid = 0
+    for op, rsel, usel in ops:
+        alive = eng._alive_indices()
+        if op == 0 and eng.free_slots() > 0:            # submit fresh work
+            e = BufferEntry(uid=next_uid,
+                            prompt=[1, 2 + next_uid % 7, 3, 4 + usel % 5])
+            next_uid += 1
+            eng.submit([e], version=0)
+        elif op == 1:                                   # decode step
+            eng.step()
+        elif op == 2 and eng.active_uids():             # targeted interrupt
+            active = sorted(eng.active_uids())
+            eng.interrupt([active[usel % len(active)]])
+        elif op == 3 and len(alive) > 1:                # fail-stop kill
+            eng._apply_fault(FaultEvent(step=1,
+                                        replica=alive[rsel % len(alive)],
+                                        kind="kill"))
+        elif op == 4:                                   # transient stall
+            eng._apply_fault(FaultEvent(step=1,
+                                        replica=alive[rsel % len(alive)],
+                                        kind="stall", duration=1 + usel % 3))
+        elif op in (5, 6, 7):                           # autoscaler tick
+            _tick_op(asc, eng, usel)
+        eng.take_failed_uids()
+        invariants(eng)
+    return asc
+
+
+def _sim_fleet_ok(eng):
+    assert 1 <= sum(eng.alive) <= len(eng.replicas)
+    for i, r in enumerate(eng.replicas):
+        if not eng.alive[i]:
+            assert not r.active_uids(), "fenced replica still decoding"
+            assert not r._resident, "fenced replica holds residency"
+
+
+@cases(max_examples=12,
+       ops=lists(tuples(integers(0, 7), integers(0, 3), integers(0, 9)),
+                 min_size=6, max_size=26))
+def test_autoscaler_chaos_sim_fleet_invariants(ops):
+    """Seconds-lane chaos: autoscaler ticks interleaved with submit /
+    step / interrupt / kill / stall on a sim fleet — the fleet shape
+    stays within bounds and fenced replicas hold nothing."""
+    eng = sim_fleet(2, capacity=2)
+    _chaos_autoscaled(eng, lambda i: make_sim(capacity=2, seed=50 + i),
+                      ops, _sim_fleet_ok)
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+@cases(max_examples=6,
+       ops=lists(tuples(integers(0, 7), integers(0, 3), integers(0, 9)),
+                 min_size=6, max_size=22))
+def test_autoscaler_chaos_slot_fleet_holds_pool_invariants(ops):
+    """Real-decode chaos: autoscaler ticks interleaved with kill / stall
+    faults on a paged SlotEngine fleet — page-pool refcounts stay
+    consistent after every op, fenced replicas hold zero pages, and
+    teardown leaks nothing."""
+    eng = EngineGroup([make_slot(capacity=2, eos_id=-1) for _ in range(2)],
+                      migrate_kv=True, elastic=True)
+    _chaos_autoscaled(eng, lambda i: make_slot(capacity=2, eos_id=-1),
+                      ops, _fleet_invariants)
+    eng.interrupt()
+    for i in eng._alive_indices():
+        eng.replicas[i].shutdown()
+    for r in eng.replicas:
+        assert r.kv.pool.pages_in_use == 0, "pages leaked at teardown"
+        assert (r.kv.pool.refcount == 0).all()
+        assert not r.kv._donors and not r.kv._donor_keys
