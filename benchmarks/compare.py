@@ -55,6 +55,16 @@ REQUIRED_SMOKE_ROWS = (
     # windowed bubble sits under the bubble_target high-water mark
     # (asserted inside bench_autoscale)
     "autoscale/long_tail", "autoscale/burst_queue",
+    # kernel/memory roofline pins (asserted inside benchmarks/roofline):
+    # packed fill-wave wall-clock <= bucketed dense, fused greedy decode
+    # step <= two-pass with identical tokens, int8 pools >= 1.9x token
+    # capacity at equal bytes resuming resident where fp re-prefills
+    "roofline/packed_prefill", "roofline/fused_sampling",
+    "roofline/int8_kv_resume",
+    # packed prefill preserves the GRPO sharing win (saved_frac at the
+    # (G-1)/G ideal, one launch per wave) and bucketed-dense greedy
+    # token identity (asserted inside bench_prefix_share)
+    "prefix_share/packed_group4", "prefix_share/packed_identity",
 )
 
 

@@ -15,6 +15,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
                       windowed bubble / queue-depth signals
   fig3_logic_rl/*     real RL token-efficiency on K&K (Fig. 3, quick mode)
   roofline_table/*    per (arch x shape) roofline terms (§Roofline)
+  roofline/*          kernel/memory roofline rows: packed prefill, fused
+                      sampling, int8 KV pages (smoke mode; §Kernel &
+                      memory roofline in the README)
 
 Full-scale variants: bench_logic_rl --full, repro.launch.dryrun --all.
 
@@ -115,6 +118,7 @@ def main() -> None:
                     ("overlap", lambda: bench_overlap.main(smoke=True)),
                     ("serving", lambda: bench_serving.main(smoke=True)),
                     ("autoscale", lambda: bench_autoscale.main(smoke=True)),
+                    ("roofline", roofline.smoke),
                     ("quickstart", lambda: [quickstart_smoke_row()]))
     else:
         sections = (("breakdown", bench_breakdown.main),

@@ -101,6 +101,10 @@ class CacheStats:
                                       # retain_across_sync)
     migrated_pages: int = 0           # pages imported from another pool
                                       # (cross-replica KV migration)
+    resume_attempts: int = 0          # resubmits of previously interrupted
+                                      # uids (hit -> resumed_without_prefill;
+                                      # miss -> the entry was evicted or
+                                      # invalidated and must re-prefill)
 
     def as_dict(self, pool: PagePool, resident: int) -> Dict[str, float]:
         return {
@@ -112,9 +116,19 @@ class CacheStats:
             "evictions": self.evictions,
             "stale_kv_reuses": self.stale_kv_reuses,
             "migrated_pages": self.migrated_pages,
+            "resume_attempts": self.resume_attempts,
+            # the zero-re-prefill hit rate under memory pressure — THE
+            # gauge int8 KV pages exist to raise (more resident entries
+            # per byte survive eviction on an oversubscribed pool)
+            "resident_resume_rate": (self.resumed_without_prefill
+                                     / max(self.resume_attempts, 1)),
             "pages_in_use": pool.pages_in_use,
             "pages_total": pool.num_pages - 1,
             "page_occupancy": pool.occupancy(),
+            # token capacity of the pool (garbage page excluded) — for an
+            # int8 pool this is ~2x (bf16) / ~4x (f32) the equal-byte fp
+            # pool's figure
+            "pool_capacity_tokens": (pool.num_pages - 1) * pool.page_size,
             "resident_seqs": resident,
         }
 
@@ -182,6 +196,10 @@ class PagedKVCache:
         # prefix donors: committed token key -> uids whose tables cover it
         self._donors: Dict[TokenKey, Set[int]] = {}
         self._donor_keys: Dict[int, Set[TokenKey]] = {}
+        # uids interrupted at some point and not yet resubmitted — their
+        # next submit is a *resume attempt* whether or not the pages
+        # survived eviction (see CacheStats.resume_attempts)
+        self._interrupted: Set[int] = set()
         self.stats = CacheStats()
 
     # -- helpers ----------------------------------------------------------
@@ -256,6 +274,12 @@ class PagedKVCache:
         prefix of a longer resident sequence — trimmed down).  On False
         any stale residency for `uid` is dropped.
         """
+        if uid in self._interrupted:
+            # count the attempt even when the pages were already evicted
+            # (uid absent from tables) — misses under memory pressure are
+            # exactly what resident_resume_rate measures
+            self._interrupted.discard(uid)
+            self.stats.resume_attempts += 1
         if uid not in self.tables or uid in self._active:
             return False
         have = self.tokens[uid]
@@ -378,6 +402,9 @@ class PagedKVCache:
             self._active.add(uid)
         else:
             self._resident[uid] = None
+            # a migrated resident entry's next submit here is a resume
+            # attempt, same as on the donor pool
+            self._interrupted.add(uid)
         # re-register the SOURCE pool's donor keys (typically the prefill
         # prefix), not the full committed sequence: a migrated GRPO member
         # must keep attracting its siblings' prompt key here
@@ -432,6 +459,7 @@ class PagedKVCache:
         """Sequence finished: drop its pages entirely."""
         self._active.discard(uid)
         self._resident.pop(uid, None)
+        self._interrupted.discard(uid)
         if uid in self.tables:
             self._drop(uid)
 
@@ -444,6 +472,7 @@ class PagedKVCache:
         if uid in self._active:
             self._active.remove(uid)
             self._resident[uid] = None
+            self._interrupted.add(uid)
 
     def deactivate_many(self, uids: Sequence[int]) -> None:
         for uid in uids:

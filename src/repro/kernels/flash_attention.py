@@ -23,9 +23,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-            *, block_q: int, block_k: int, window: int, softcap: float,
-            scale: float):
+def _kernel(q_ref, k_ref, v_ref, *rest, block_q: int, block_k: int,
+            window: int, softcap: float, scale: float, seg: bool):
+    if seg:
+        sq_ref, sk_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        sq_ref = sk_ref = None
+        o_ref, m_ref, l_ref, acc_ref = rest
     qblk = pl.program_id(2)
     kblk = pl.program_id(3)
     nk = pl.num_programs(3)
@@ -60,6 +64,10 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         mask = qpos >= kpos
         if window > 0:
             mask = jnp.logical_and(mask, qpos - kpos < window)
+        if seg:
+            # packed prefill: no attention across segment boundaries
+            mask = jnp.logical_and(
+                mask, sq_ref[...][:, None] == sk_ref[...][None, :])
         s = jnp.where(mask, s, NEG_INF)
         m_prev = m_ref[...]                                 # (bq, 1)
         m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
@@ -77,10 +85,18 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    seg_ids: jnp.ndarray = None,
                     block_q: int = 128, block_k: int = 128,
                     window: int = 0, softcap: float = 0.0,
                     interpret: bool = True) -> jnp.ndarray:
-    """q: (B, S, H, D); k/v: (B, S, Kh, D) -> (B, S, H, D).  Causal."""
+    """q: (B, S, H, D); k/v: (B, S, Kh, D) -> (B, S, H, D).  Causal.
+
+    ``seg_ids``: optional (B, S) int32 segment ids for packed ragged
+    prefill — several prompts concatenated per row attend only within
+    their own segment (pad positions carry -1; their output rows are
+    garbage and must be discarded by the caller).  The seg tile rides in
+    as two extra VMEM operands (a block_q view for queries, a block_k
+    view for keys of the same array)."""
     B, S, H, D = q.shape
     Kh = k.shape[2]
     G = H // Kh
@@ -88,18 +104,29 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     grid = (B, H, S // block_q, S // block_k)
     kernel = functools.partial(_kernel, block_q=block_q, block_k=block_k,
                                window=window, softcap=softcap,
-                               scale=1.0 / math.sqrt(D))
+                               scale=1.0 / math.sqrt(D),
+                               seg=seg_ids is not None)
+    in_specs = [
+        pl.BlockSpec((None, block_q, None, D),
+                     lambda b, h, qb, kb: (b, qb, h, 0)),
+        pl.BlockSpec((None, block_k, None, D),
+                     lambda b, h, qb, kb: (b, kb, h // G, 0)),
+        pl.BlockSpec((None, block_k, None, D),
+                     lambda b, h, qb, kb: (b, kb, h // G, 0)),
+    ]
+    inputs = [q, k, v]
+    if seg_ids is not None:
+        assert seg_ids.shape == (B, S), (seg_ids.shape, (B, S))
+        in_specs.append(pl.BlockSpec((None, block_q),
+                                     lambda b, h, qb, kb: (b, qb)))
+        in_specs.append(pl.BlockSpec((None, block_k),
+                                     lambda b, h, qb, kb: (b, kb)))
+        inputs.extend([seg_ids.astype(jnp.int32),
+                       seg_ids.astype(jnp.int32)])
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((None, block_q, None, D),
-                         lambda b, h, qb, kb: (b, qb, h, 0)),
-            pl.BlockSpec((None, block_k, None, D),
-                         lambda b, h, qb, kb: (b, kb, h // G, 0)),
-            pl.BlockSpec((None, block_k, None, D),
-                         lambda b, h, qb, kb: (b, kb, h // G, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((None, block_q, None, D),
                                lambda b, h, qb, kb: (b, qb, h, 0)),
         out_shape=jax.ShapeDtypeStruct((B, S, H, D), q.dtype),
@@ -110,4 +137,4 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         ],
         interpret=interpret,
         name="flash_attention",
-    )(q, k, v)
+    )(*inputs)

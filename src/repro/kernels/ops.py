@@ -14,6 +14,8 @@ import jax
 
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.ragged_decode_attention import (
+    fused_sample as _fused_sample)
+from repro.kernels.ragged_decode_attention import (
     paged_decode_attention as _paged)
 from repro.kernels.ragged_decode_attention import (
     ragged_decode_attention as _ragged)
@@ -35,10 +37,29 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, kv_len,
                   softcap=softcap, interpret=INTERPRET)
 
 
+@functools.partial(jax.jit, static_argnames=("softcap",))
+def paged_decode_attention_int8(q, k_pages, v_pages, k_scales, v_scales,
+                                block_tables, kv_len, softcap: float = 0.0):
+    """Paged decode over int8-quantized pages with per-page f32 scales."""
+    return _paged(q, k_pages, v_pages, block_tables, kv_len,
+                  softcap=softcap, k_scales=k_scales, v_scales=v_scales,
+                  interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("top_k", "block_v", "softcap"))
+def fused_sample(x, w, top_k: int = 1, block_v: int = 128,
+                 softcap: float = 0.0):
+    """Fused LM-head matmul + top-k + logsumexp (no (B, V) round-trip)."""
+    return _fused_sample(x, w, top_k=top_k, block_v=block_v,
+                         softcap=softcap, interpret=INTERPRET)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("block_q", "block_k", "window",
                                     "softcap"))
-def flash_attention(q, k, v, block_q: int = 128, block_k: int = 128,
-                    window: int = 0, softcap: float = 0.0):
-    return _flash(q, k, v, block_q=block_q, block_k=block_k, window=window,
-                  softcap=softcap, interpret=INTERPRET)
+def flash_attention(q, k, v, seg_ids=None, block_q: int = 128,
+                    block_k: int = 128, window: int = 0,
+                    softcap: float = 0.0):
+    return _flash(q, k, v, seg_ids=seg_ids, block_q=block_q,
+                  block_k=block_k, window=window, softcap=softcap,
+                  interpret=INTERPRET)

@@ -40,11 +40,13 @@ NEG_INF = -1e30
 
 
 def _flash_decode_block(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-                        *, kblk, nk, kstart, kv_len, softcap: float):
+                        *, kblk, nk, kstart, kv_len, softcap: float,
+                        k_scale=None, v_scale=None):
     """Shared flash-decode body: one (block_k, Kh, D) kv tile starting at
     logical position `kstart`, online-softmax accumulated in VMEM scratch.
     Refs: q (H, D) | k/v (block_k, Kh, D) | o (H, D) |
-    scratch m/l (H, 1) f32, acc (H, D) f32."""
+    scratch m/l (H, 1) f32, acc (H, D) f32.
+    ``k_scale``/``v_scale``: per-page dequant scalars (int8 KV pages)."""
 
     @pl.when(kblk == 0)
     def _init():
@@ -57,6 +59,10 @@ def _flash_decode_block(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         q = q_ref[...].astype(jnp.float32)            # (H, D)
         k = k_ref[...].astype(jnp.float32)            # (bk, Kh, D)
         v = v_ref[...].astype(jnp.float32)
+        if k_scale is not None:
+            k = k * k_scale
+        if v_scale is not None:
+            v = v * v_scale
         H, D = q.shape
         bk, Kh, _ = k.shape
         G = H // Kh
@@ -111,6 +117,23 @@ def _paged_kernel(bt_ref, kv_len_ref, q_ref, k_ref, v_ref, o_ref,
                         softcap=softcap)
 
 
+def _paged_kernel_int8(bt_ref, kv_len_ref, ks_ref, vs_ref, q_ref, k_ref,
+                       v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                       page_size: int, softcap: float):
+    """int8-page variant: k/v pages are stored quantized with one f32
+    scale per physical page; the scales ride in as scalar-prefetch
+    operands and are dereferenced through the same block table as the
+    page itself, so dequant happens in-register after the page DMA."""
+    b = pl.program_id(0)
+    kblk = pl.program_id(1)
+    page = bt_ref[b, kblk]
+    _flash_decode_block(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                        kblk=kblk, nk=pl.num_programs(1),
+                        kstart=kblk * page_size, kv_len=kv_len_ref[b],
+                        softcap=softcap,
+                        k_scale=ks_ref[page], v_scale=vs_ref[page])
+
+
 def ragged_decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
                             v_cache: jnp.ndarray, kv_len: jnp.ndarray,
                             *, block_k: int = 128, softcap: float = 0.0,
@@ -151,6 +174,8 @@ def ragged_decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
 def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
                            v_pages: jnp.ndarray, block_tables: jnp.ndarray,
                            kv_len: jnp.ndarray, *, softcap: float = 0.0,
+                           k_scales: jnp.ndarray = None,
+                           v_scales: jnp.ndarray = None,
                            interpret: bool = True) -> jnp.ndarray:
     """Decode attention over a paged KV pool.
 
@@ -164,23 +189,54 @@ def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
     k/v index_maps can dereference the table — each grid step DMAs one
     physical page, which is how a GRPO group's shared prefix pages are
     read by every member without a dense per-slot copy.
+
+    ``k_scales``/``v_scales``: (N,) f32 per-page dequant scales for int8
+    page pools (``kv_quant="int8"`` engines).  They join the scalar
+    prefetch so the kernel dequantises each page in-register right after
+    its DMA — the pool stays int8 in HBM, halving (vs bf16; quartering vs
+    f32) the decode's memory traffic and doubling effective capacity.
     """
     B, H, D = q.shape
     page, Kh = k_pages.shape[1], k_pages.shape[2]
     nb = block_tables.shape[1]
     assert block_tables.shape[0] == B and kv_len.shape == (B,)
-    kernel = functools.partial(_paged_kernel, page_size=page, softcap=softcap)
+    quant = k_scales is not None
+    assert quant == (v_scales is not None)
+    if quant:
+        kernel = functools.partial(_paged_kernel_int8, page_size=page,
+                                   softcap=softcap)
+        nsp = 4                      # block_tables, kv_len, k/v_scales
+        scalar_ops = (block_tables.astype(jnp.int32),
+                      kv_len.astype(jnp.int32),
+                      k_scales.astype(jnp.float32),
+                      v_scales.astype(jnp.float32))
+
+        def q_map(b, kb, bt, kl, ks, vs):
+            return (b, 0, 0)
+
+        def kv_map(b, kb, bt, kl, ks, vs):
+            return (bt[b, kb], 0, 0, 0)
+    else:
+        kernel = functools.partial(_paged_kernel, page_size=page,
+                                   softcap=softcap)
+        nsp = 2                      # block_tables, kv_len
+        scalar_ops = (block_tables.astype(jnp.int32),
+                      kv_len.astype(jnp.int32))
+
+        def q_map(b, kb, bt, kl):
+            return (b, 0, 0)
+
+        def kv_map(b, kb, bt, kl):
+            return (bt[b, kb], 0, 0, 0)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,       # block_tables, kv_len
+        num_scalar_prefetch=nsp,
         grid=(B, nb),
         in_specs=[
-            pl.BlockSpec((None, H, D), lambda b, kb, bt, kl: (b, 0, 0)),
-            pl.BlockSpec((None, page, Kh, D),
-                         lambda b, kb, bt, kl: (bt[b, kb], 0, 0, 0)),
-            pl.BlockSpec((None, page, Kh, D),
-                         lambda b, kb, bt, kl: (bt[b, kb], 0, 0, 0)),
+            pl.BlockSpec((None, H, D), q_map),
+            pl.BlockSpec((None, page, Kh, D), kv_map),
+            pl.BlockSpec((None, page, Kh, D), kv_map),
         ],
-        out_specs=pl.BlockSpec((None, H, D), lambda b, kb, bt, kl: (b, 0, 0)),
+        out_specs=pl.BlockSpec((None, H, D), q_map),
         scratch_shapes=[
             pltpu.VMEM((H, 1), jnp.float32),
             pltpu.VMEM((H, 1), jnp.float32),
@@ -193,5 +249,106 @@ def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
         interpret=interpret,
         name="paged_decode_attention",
-    )(block_tables.astype(jnp.int32), kv_len.astype(jnp.int32),
-      q, k_pages, v_pages)
+    )(*scalar_ops, q, k_pages, v_pages)
+
+
+# ---------------------------------------------------------------------------
+# Fused sampling: LM head matmul + greedy/top-k + logsumexp in one pass
+# ---------------------------------------------------------------------------
+
+def _fused_sample_kernel(x_ref, w_ref, vals_ref, idx_ref, lse_ref,
+                         m_ref, l_ref, tv_ref, ti_ref, *,
+                         block_v: int, top_k: int, vocab: int,
+                         softcap: float):
+    """One (1, Dm) hidden row x one (Dm, block_v) head slice per program.
+    Running logsumexp (m/l scratch) and running top-k (tv/ti scratch)
+    accumulate across the sequential vocab grid axis; the merge keeps the
+    running entries FIRST in the concat so ``lax.top_k``'s stable
+    tie-break (lowest index wins) reproduces ``argmax``'s
+    first-occurrence rule for the greedy token."""
+    vblk = pl.program_id(1)
+    nv = pl.num_programs(1)
+
+    @pl.when(vblk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        tv_ref[...] = jnp.full_like(tv_ref, NEG_INF)
+        ti_ref[...] = jnp.zeros_like(ti_ref)
+
+    x = x_ref[...].astype(jnp.float32)                    # (1, Dm)
+    w = w_ref[...].astype(jnp.float32)                    # (Dm, bv)
+    s = jnp.dot(x, w, preferred_element_type=jnp.float32)  # (1, bv)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    col = vblk * block_v + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_v), 1)
+    s = jnp.where(col < vocab, s, NEG_INF)                # head padding
+    m_prev = m_ref[...]                                   # (1, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(col < vocab, p, 0.0)
+    l_ref[...] = l_ref[...] * jnp.exp(m_prev - m_new) + jnp.sum(
+        p, axis=-1, keepdims=True)
+    m_ref[...] = m_new
+    cat_v = jnp.concatenate([tv_ref[...], s], axis=1)     # (1, K + bv)
+    cat_i = jnp.concatenate([ti_ref[...], col], axis=1)
+    top_v, sel = jax.lax.top_k(cat_v, top_k)
+    tv_ref[...] = top_v
+    ti_ref[...] = jnp.take_along_axis(cat_i, sel, axis=1)
+
+    @pl.when(vblk == nv - 1)
+    def _finalize():
+        vals_ref[...] = tv_ref[0]
+        idx_ref[...] = ti_ref[0]
+        lse_ref[...] = (m_ref[...] + jnp.log(
+            jnp.maximum(l_ref[...], 1e-30)))[0]
+
+
+def fused_sample(x: jnp.ndarray, w: jnp.ndarray, *, top_k: int = 1,
+                 block_v: int = 128, softcap: float = 0.0,
+                 interpret: bool = True):
+    """Fused LM-head + sampling epilogue for the paged decode step.
+
+    x: (B, Dm) final-normed hidden states; w: (Dm, V) head weights.
+    Returns (vals (B, top_k) f32, idx (B, top_k) i32, lse (B, 1) f32):
+    the top-k logits (softcapped), their vocab indices, and the
+    logsumexp over the full vocab — everything greedy/top-k sampling
+    needs (greedy token = idx[:, 0], its logprob = vals[:, 0] - lse[:, 0])
+    without ever materialising the (B, V) logits round-trip.
+    """
+    B, Dm = x.shape
+    V = w.shape[1]
+    assert w.shape[0] == Dm, (x.shape, w.shape)
+    nv = -(-V // block_v)
+    if V % block_v:
+        w = jnp.pad(w, ((0, 0), (0, nv * block_v - V)))
+    kernel = functools.partial(_fused_sample_kernel, block_v=block_v,
+                               top_k=top_k, vocab=V, softcap=softcap)
+    vals, idx, lse = pl.pallas_call(
+        kernel,
+        grid=(B, nv),
+        in_specs=[
+            pl.BlockSpec((None, Dm), lambda b, vb: (b, 0)),
+            pl.BlockSpec((Dm, block_v), lambda b, vb: (0, vb)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, top_k), lambda b, vb: (b, 0)),
+            pl.BlockSpec((None, top_k), lambda b, vb: (b, 0)),
+            pl.BlockSpec((None, 1), lambda b, vb: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, top_k), jnp.float32),
+            jax.ShapeDtypeStruct((B, top_k), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, top_k), jnp.float32),
+            pltpu.VMEM((1, top_k), jnp.int32),
+        ],
+        interpret=interpret,
+        name="fused_sample",
+    )(x, w)
+    return vals, idx, lse

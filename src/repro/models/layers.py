@@ -120,12 +120,15 @@ def full_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
 def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                         causal: bool = True, window: int = 0,
                         softcap: float = 0.0,
-                        q_block: int = 512, k_block: int = 1024) -> jnp.ndarray:
+                        q_block: int = 512, k_block: int = 1024,
+                        seg_q=None, seg_k=None) -> jnp.ndarray:
     """Memory-bounded causal attention: lax.map over q blocks, lax.scan over
     kv blocks with online-softmax carry.  O(Sq/Bq * B*H*Bq*Bk) temp memory.
 
     This is the pure-JAX flash-attention used for long-sequence prefill on
     every backend; the Pallas kernel implements the same tiling for TPU.
+    ``seg_q``/``seg_k``: (B, S) segment ids for packed prefill — tokens
+    attend only within their segment (pad positions carry -1).
     """
     B, Sq, H, D = q.shape
     Sk, Kh = k.shape[1], k.shape[2]
@@ -134,11 +137,17 @@ def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     if Sq % q_block:
         q = jnp.pad(q, ((0, 0), (0, q_block - Sq % q_block), (0, 0), (0, 0)))
         Sq = q.shape[1]
+    if seg_q is not None and Sq != Sq_orig:
+        seg_q = jnp.pad(seg_q, ((0, 0), (0, Sq - Sq_orig)),
+                        constant_values=-1)
     if Sk % k_block:
         # padded keys are masked out via the kpos < Sk_orig check below
         k = jnp.pad(k, ((0, 0), (0, k_block - Sk % k_block), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, k_block - Sk % k_block), (0, 0), (0, 0)))
         Sk = k.shape[1]
+    if seg_k is not None and Sk != Sk_orig:
+        seg_k = jnp.pad(seg_k, ((0, 0), (0, Sk - Sk_orig)),
+                        constant_values=-1)
     nq, nk = Sq // q_block, Sk // k_block
     scale = 1.0 / math.sqrt(D)
 
@@ -150,6 +159,8 @@ def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         v = jnp.repeat(v, G, axis=2)
     kb = k.reshape(B, nk, k_block, H, D)
     vb = v.reshape(B, nk, k_block, H, D)
+    skb = (seg_k.reshape(B, nk, k_block) if seg_k is not None
+           else jnp.zeros((B, nk, k_block), jnp.int32))
 
     def one_q_block(qi):
         qblk = jax.lax.dynamic_slice_in_dim(q, qi * q_block, q_block, axis=1)
@@ -158,10 +169,13 @@ def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         # f32 softmax below doesn't already provide
         qblk = (qblk.astype(jnp.float32) * scale).astype(q.dtype)
         qpos = qi * q_block + jnp.arange(q_block)
+        sq_blk = (jax.lax.dynamic_slice_in_dim(seg_q, qi * q_block, q_block,
+                                               axis=1)
+                  if seg_q is not None else None)
 
         def kv_step(carry, inp):
             m, l, acc = carry
-            kj, vj, kidx = inp
+            kj, vj, skj, kidx = inp
             kpos = kidx * k_block + jnp.arange(k_block)
             s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kj,
                            preferred_element_type=jnp.float32)
@@ -172,7 +186,11 @@ def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                 mask = mask & (qpos[:, None] >= kpos[None, :])
             if window:
                 mask = mask & (qpos[:, None] - kpos[None, :] < window)
-            s = jnp.where(mask[None, None], s, -jnp.inf)
+            if sq_blk is not None:
+                mask = mask[None] & (sq_blk[:, :, None] == skj[:, None, :])
+            else:
+                mask = mask[None]
+            s = jnp.where(mask[:, None], s, -jnp.inf)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             # guard fully-masked rows (m_new == -inf)
             m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
@@ -190,7 +208,8 @@ def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         a0 = jnp.zeros((B, H, q_block, D), jnp.float32)
         (m, l, acc), _ = jax.lax.scan(
             kv_step, (m0, l0, a0),
-            (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), jnp.arange(nk)))
+            (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0),
+             jnp.moveaxis(skb, 1, 0), jnp.arange(nk)))
         out = acc / jnp.maximum(l, 1e-30)[..., None]
         # (B, H, q_block, D) -> (B, q_block, H, D)
         return jnp.moveaxis(out, 2, 1).astype(q.dtype)

@@ -35,6 +35,10 @@ class Model:
     decode_step: Callable          # (params, token, cache, kv_len, **kw) -> (logits, cache)
     padding_side: str              # "right" (attention) | "left" (ssm/hybrid)
     prefill_extra: int = 0         # cache rows prepended by the stub frontend
+    # packed ragged prefill: several prompts concatenated per row with
+    # segment-offset tables (batch adds "seg_ids"/"positions").  None for
+    # families without segment-masked attention support.
+    prefill_packed: Any = None     # (params, batch, cache) -> (logits, cache)
 
 
 def _moe_mlp_fn(cfg: ModelConfig, ep_mesh=None, data_axes=("data",)):
@@ -80,12 +84,24 @@ def build_model(cfg: ModelConfig, ep_mesh=None, data_axes=("data",)) -> Model:
                               embeds=embeds)
 
         def decode_step(params, token, cache, kv_len, **kw):
-            return TF.decode(params, cfg, token, cache, kv_len, mlp_fn=mlp_fn)
+            return TF.decode(params, cfg, token, cache, kv_len, mlp_fn=mlp_fn,
+                             return_hidden=kw.get("return_hidden", False))
+
+        prefill_packed = None
+        if fam != "vlm":
+            # vlm prepends stub patch rows per prompt — incompatible with
+            # the packed layout's contiguous-segment assumption
+            def prefill_packed(params, batch, cache):
+                return TF.prefill(params, cfg, batch["tokens"], cache,
+                                  batch["prompt_lens"], mlp_fn=mlp_fn,
+                                  seg_ids=batch["seg_ids"],
+                                  positions=batch["positions"])
 
         return Model(cfg, init_params, forward, init_cache, prefill,
                      decode_step, padding_side="right",
                      prefill_extra=(cfg.num_stub_positions
-                                    if fam == "vlm" else 0))
+                                    if fam == "vlm" else 0),
+                     prefill_packed=prefill_packed)
 
     if fam == "hybrid":
         def forward(params, batch):

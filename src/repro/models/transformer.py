@@ -214,9 +214,15 @@ def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
                 cache: Dict[str, jnp.ndarray], kv_len: jnp.ndarray,
                 mlp_fn: Optional[Callable] = None,
                 embeds: Optional[jnp.ndarray] = None,
+                return_hidden: bool = False,
                 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """token: (B,) int32; kv_len: (B,) current lengths (position of the new
-    token).  Returns (logits (B, V), updated cache)."""
+    token).  Returns (logits (B, V), updated cache).
+
+    ``return_hidden=True`` returns the final-normed hidden state (B, d)
+    instead of logits — the fused-sampling decode path computes the LM
+    head blockwise in the same pass as top-k/lse, so the full (B, V)
+    logits round-trip never materialises (see rollout/engine.py)."""
     if embeds is None:
         x = embed_tokens(params, cfg, token[:, None])
     else:
@@ -248,6 +254,10 @@ def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
         cache = dict(cache)
         cache["k"] = _write_token(cache["k"], k_new, kv_len)
         cache["v"] = _write_token(cache["v"], v_new, kv_len)
+        if return_hidden:
+            hidden = L.norm(x[:, 0], params["final_norm"], cfg.norm_type,
+                            cfg.norm_eps)
+            return hidden, cache
         logits = lm_logits(params, cfg, x[:, 0])
         return logits, cache
 
@@ -300,10 +310,13 @@ def decode_step_pattern(params: Params, cfg: ModelConfig, token: jnp.ndarray,
     return logits, cache
 
 
-def decode(params, cfg, token, cache, kv_len, mlp_fn=None, embeds=None):
+def decode(params, cfg, token, cache, kv_len, mlp_fn=None, embeds=None,
+           return_hidden=False):
     if pattern_len(cfg) == 2:
+        assert not return_hidden, "return_hidden: local/global not supported"
         return decode_step_pattern(params, cfg, token, cache, kv_len, mlp_fn)
-    return decode_step(params, cfg, token, cache, kv_len, mlp_fn, embeds)
+    return decode_step(params, cfg, token, cache, kv_len, mlp_fn, embeds,
+                       return_hidden=return_hidden)
 
 
 # ---------------------------------------------------------------------------
@@ -314,18 +327,34 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
             cache: Dict[str, jnp.ndarray], prompt_lens: jnp.ndarray,
             mlp_fn: Optional[Callable] = None,
             embeds: Optional[jnp.ndarray] = None,
+            seg_ids: Optional[jnp.ndarray] = None,
+            positions: Optional[jnp.ndarray] = None,
             ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """tokens: (B, S) right-padded prompts.  Fills cache[:, :, :S]; returns
     (logits at each position (B, S, V), cache).  Padded positions are
-    masked downstream via kv_len = prompt_lens."""
+    masked downstream via kv_len = prompt_lens.
+
+    Packed mode (``seg_ids`` given): each row holds several prompts
+    concatenated back to back; ``seg_ids`` (B, S) carries the row-local
+    segment index (-1 for padding) and ``positions`` the within-segment
+    position of every token (rope / learned pos-emb see per-prompt
+    coordinates).  Attention masks across segment boundaries; the causal
+    and sliding-window masks stay correct under the packed global arange
+    because segments are contiguous, so global position deltas equal
+    within-segment deltas."""
     x = embed_tokens(params, cfg, tokens) if embeds is None else embeds
     B, S = x.shape[:2]
-    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
     if cfg.pos_embedding == "learned":
-        x = x + params["pos_embed"][:S][None].astype(x.dtype)
+        if seg_ids is None:
+            x = x + params["pos_embed"][:S][None].astype(x.dtype)
+        else:
+            x = x + params["pos_embed"][positions].astype(x.dtype)
     pl = pattern_len(cfg)
 
     if pl == 2:
+        assert seg_ids is None, "packed prefill: local/global not supported"
         W = cache["k_local"].shape[2]
 
         def body(h, xs):
@@ -373,11 +402,13 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
             if S <= FULL_ATTN_MAX_SEQ:
                 o = L.full_attention(q, k, v, causal=True,
                                      window=cfg.attn.sliding_window,
-                                     softcap=cfg.attn.attn_softcap)
+                                     softcap=cfg.attn.attn_softcap,
+                                     seg_q=seg_ids, seg_k=seg_ids)
             else:
                 o = L.blockwise_attention(q, k, v, causal=True,
                                           window=cfg.attn.sliding_window,
-                                          softcap=cfg.attn.attn_softcap)
+                                          softcap=cfg.attn.attn_softcap,
+                                          seg_q=seg_ids, seg_k=seg_ids)
             h = h + L.attn_output(group["attn"], o)
             hn = L.norm(h, group["ln2"], cfg.norm_type, cfg.norm_eps)
             y, _ = _apply_mlp(group, cfg, hn, mlp_fn)

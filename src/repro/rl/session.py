@@ -181,6 +181,13 @@ class SessionConfig:
     autoscaler_window: float = 1.0    # metrics window span, sim seconds
     min_replicas: int = 1             # never shed below this
     max_replicas: Optional[int] = None  # never grow above this
+    # kernel/memory roofline knobs (see README §Kernel & memory roofline):
+    # packed segment-masked prefill (one launch per fill wave), in-kernel
+    # greedy sampling (no (B, V) logits round-trip at temperature 0), and
+    # int8 KV pages (None | "int8"; ~2-4x pool capacity at equal bytes)
+    packed_prefill: bool = False
+    fused_sampling: bool = False
+    kv_quant: Optional[str] = None
     mode: Mode = Mode.ON_POLICY
     rollout_batch: int = 32           # engine capacity (slots)
     group_size: int = 2
@@ -424,7 +431,10 @@ class RLSession:
                 max_gen_len=cfg.max_gen_len,
                 eos_id=vocab.eos_id, pad_id=vocab.pad_id,
                 temperature=cfg.temperature, seed=cfg.seed + i,
-                kv_retain_across_sync=(Mode(cfg.mode) == Mode.PARTIAL)))
+                kv_retain_across_sync=(Mode(cfg.mode) == Mode.PARTIAL),
+                packed_prefill=cfg.packed_prefill,
+                fused_sampling=cfg.fused_sampling,
+                kv_quant=cfg.kv_quant))
             eval_gen = spec.make_generator(9999)
             eval_set = eval_gen.batch(cfg.eval_size)
 

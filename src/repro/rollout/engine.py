@@ -122,7 +122,10 @@ class SlotEngine:
                  seed: int = 0, paged: Optional[bool] = None,
                  page_size: int = DEFAULT_PAGE_SIZE,
                  num_pages: Optional[int] = None,
-                 kv_retain_across_sync: bool = True):
+                 kv_retain_across_sync: bool = True,
+                 packed_prefill: bool = False,
+                 fused_sampling: bool = False,
+                 kv_quant: Optional[str] = None):
         self.model = model
         self.params_fn = params_fn
         self.capacity = capacity
@@ -141,6 +144,20 @@ class SlotEngine:
             assert supports_paging(model), \
                 "paged KV cache requires right padding and a {k, v} cache"
         self.paged = paged
+        assert kv_quant in (None, "int8"), kv_quant
+        self.kv_quant = kv_quant
+        if kv_quant:
+            assert paged, "kv_quant requires the paged layout"
+        self.packed_prefill = packed_prefill
+        if packed_prefill:
+            assert paged and model.prefill_packed is not None \
+                and model.prefill_extra == 0, \
+                "packed_prefill requires a paged engine, a family with " \
+                "segment-masked prefill, and no stub frontend rows"
+        self.fused_sampling = fused_sampling
+        if fused_sampling:
+            assert paged, "fused_sampling requires the paged layout"
+        self.prefill_launches = 0       # one per prefill kernel launch
         self.slots = SlotTable(capacity)
         if paged:
             self.page_size = page_size
@@ -149,6 +166,18 @@ class SlotEngine:
             self.num_pages = num_pages or (
                 capacity * self._pages_per_seq + capacity + 1)
             self.cache = model.init_cache(self.num_pages, page_size)
+            if kv_quant == "int8":
+                # quantized page pool: int8 storage + one f32 scale per
+                # (layer, page) plane — ~4x (f32) / ~2x (bf16) the token
+                # capacity at equal bytes
+                nl = self.cache["k"].shape[0]
+                self.cache = {name: jnp.zeros(arr.shape, jnp.int8)
+                              for name, arr in self.cache.items()}
+                self.kv_scales = {
+                    "k": jnp.ones((nl, self.num_pages), jnp.float32),
+                    "v": jnp.ones((nl, self.num_pages), jnp.float32)}
+            else:
+                self.kv_scales = {}
             # retain=True keeps resident/shared KV across weight syncs
             # (PipelineRL/APRIL approximation, counted in stale_kv_reuses);
             # retain=False restores dense fresh-prefill-after-update
@@ -156,12 +185,17 @@ class SlotEngine:
             self.kv = PagedKVCache(self.num_pages, page_size,
                                    extra_rows=model.prefill_extra,
                                    retain_across_sync=kv_retain_across_sync)
-            self._paged_decode_cache: Dict[int, Callable] = {}
+            self._paged_decode_cache: Dict[Tuple, Callable] = {}
         else:
+            self.kv_scales = {}
             self.cache = model.init_cache(capacity, max_total_len)
             self.kv = None
             self._decode_jit = jax.jit(self._decode_fn)
-        self._prefill_cache: Dict[Tuple[int, int], Callable] = {}
+        # int8 and fp cache configs must not collide on a (width, batch)
+        # bucket — the KV dtype is part of every compile-cache key
+        self._kv_dtype_key = kv_quant or jnp.dtype(
+            model.cfg.compute_dtype).name
+        self._prefill_cache: Dict[Tuple, Callable] = {}
 
     # -- time ---------------------------------------------------------------
 
@@ -184,7 +218,11 @@ class SlotEngine:
 
     def cache_stats(self) -> Optional[Dict[str, float]]:
         """Page-pool gauges + prefix-sharing counters (None when dense)."""
-        return self.kv.stats_dict() if self.paged else None
+        if not self.paged:
+            return None
+        d = self.kv.stats_dict()
+        d["prefill_launches"] = float(self.prefill_launches)
+        return d
 
     # -- submit: batched prefill of new entries into free slots ---------------
 
@@ -271,8 +309,14 @@ class SlotEngine:
         t.gen_budget[slots] = self.max_gen_len
 
     def _prefill_to_pages(self, entries, pres) -> None:
-        """Run one bucketed prefill over the unique prefixes and scatter
-        the resulting KV rows into freshly allocated pages."""
+        """Run prefill over the unique prefixes and scatter the resulting
+        KV rows into freshly allocated pages.  Default path: one bucketed
+        dense launch per batch; with ``packed_prefill`` the prefixes are
+        concatenated into rows (segment-masked attention), so one launch
+        covers the whole fill wave without per-prompt padding waste."""
+        if self.packed_prefill:
+            self._prefill_to_pages_packed(entries, pres)
+            return
         params = self.params_fn()
         P = self.page_size
         extra = self.model.prefill_extra
@@ -296,17 +340,98 @@ class SlotEngine:
                 rows.append(i)
                 blks.append(j)
                 phys.append(page)
-        rows, blks = np.asarray(rows), np.asarray(blks)
-        phys = np.asarray(phys)
+        self._scatter_pages(sub_cache, np.asarray(rows), np.asarray(blks),
+                            np.asarray(phys))
+
+    def _prefill_to_pages_packed(self, entries, pres) -> None:
+        """Packed ragged prefill: bin-pack page-aligned prefix spans into
+        a few rows of concatenated segments and run ONE segment-masked
+        launch for the whole wave.
+
+        Each prefix occupies ``ceil(len/P)*P`` columns (page-aligned so
+        its KV pages are whole row blocks); first-fit-decreasing packing
+        into ``max_total_len``-column rows, then the usual pow2 width /
+        batch bucketing on the packed shape.  Attention is masked by
+        segment id and positions restart per segment, so the KV written
+        for each prefix is identical to a solo prefill of that prefix.
+        """
+        params = self.params_fn()
+        P = self.page_size
+        span = [-(-max(len(p), 1) // P) * P for p in pres]
+        order = sorted(range(len(pres)), key=lambda i: -span[i])
+        row_of = [0] * len(pres)
+        offset = [0] * len(pres)
+        fill: List[int] = []                    # columns used per row
+        for i in order:
+            for r, used in enumerate(fill):
+                if used + span[i] <= self.max_total_len:
+                    row_of[i], offset[i] = r, used
+                    fill[r] = used + span[i]
+                    break
+            else:
+                row_of[i], offset[i] = len(fill), 0
+                fill.append(span[i])
+        width = self._bucket_width(max(fill))
+        kb = self._bucket_batch(len(fill))
+        cache_len = -(-width // P) * P
+
+        toks = np.full((kb, width), self.pad_id, np.int32)
+        seg = np.full((kb, width), -1, np.int32)
+        pos = np.zeros((kb, width), np.int32)
+        plens = np.zeros(kb, np.int32)
+        for i, p in enumerate(pres):
+            r, o = row_of[i], offset[i]
+            toks[r, o:o + len(p)] = p
+            seg[r, o:o + span[i]] = i           # pad tail shares the segment
+            pos[r, o:o + span[i]] = np.arange(span[i])
+            plens[r] = max(plens[r], o + len(p))
+        batch = {"tokens": jnp.asarray(toks),
+                 "prompt_lens": jnp.asarray(plens),
+                 "seg_ids": jnp.asarray(seg),
+                 "positions": jnp.asarray(pos)}
+        sub_cache = self.model.init_cache(kb, cache_len)
+        key = ("packed", width, kb, self._kv_dtype_key)
+        fn = self._prefill_cache.get(key)
+        if fn is None:
+            fn = jax.jit(self.model.prefill_packed)
+            self._prefill_cache[key] = fn
+        _, sub_cache = fn(params, batch, sub_cache)
+        self.prefill_launches += 1
+
+        rows, blks, phys = [], [], []
+        for i, (e, p) in enumerate(zip(entries, pres)):
+            table = self.kv.register_prefill(e.uid, tuple(p))
+            for j, page in enumerate(table):
+                rows.append(row_of[i])
+                blks.append(offset[i] // P + j)
+                phys.append(page)
+        self._scatter_pages(sub_cache, np.asarray(rows), np.asarray(blks),
+                            np.asarray(phys))
+
+    def _scatter_pages(self, sub_cache, rows, blks, phys) -> None:
+        """Scatter prefilled KV page blocks into the pool at ``phys``
+        (quantizing per page when the pool is int8)."""
+        P = self.page_size
         cache = dict(self.cache)
+        scales = dict(self.kv_scales)
         for name in ("k", "v"):
             sub = sub_cache[name]               # (L, kb, cache_len, Kh, D)
             nl, nb_, ns = sub.shape[:3]
             blocks = sub.reshape(nl, nb_, ns // P, P, *sub.shape[3:])
             sel = blocks[:, rows, blks]         # (L, n_pages, P, Kh, D)
-            cache[name] = cache[name].at[:, phys].set(
-                sel.astype(cache[name].dtype))
+            if self.kv_quant == "int8":
+                sel = sel.astype(jnp.float32)
+                amax = jnp.max(jnp.abs(sel), axis=(2, 3, 4))
+                s = jnp.maximum(amax, 1e-8) / 127.0
+                q = jnp.clip(jnp.round(sel / s[:, :, None, None, None]),
+                             -127, 127).astype(jnp.int8)
+                cache[name] = cache[name].at[:, phys].set(q)
+                scales[name] = scales[name].at[:, phys].set(s)
+            else:
+                cache[name] = cache[name].at[:, phys].set(
+                    sel.astype(cache[name].dtype))
         self.cache = cache
+        self.kv_scales = scales
 
     def _add_stub_inputs(self, batch: Dict, k: int) -> None:
         cfg = self.model.cfg
@@ -336,10 +461,12 @@ class SlotEngine:
         return min(next_pow2(k), self.capacity)
 
     def _prefill(self, params, batch, cache, width, kb):
-        fn = self._prefill_cache.get((width, kb))
+        key = (width, kb, self._kv_dtype_key)
+        fn = self._prefill_cache.get(key)
         if fn is None:
             fn = jax.jit(self.model.prefill)
-            self._prefill_cache[(width, kb)] = fn
+            self._prefill_cache[key] = fn
+        self.prefill_launches += 1
         return fn(params, batch, cache)
 
     # -- decode ---------------------------------------------------------------
@@ -361,7 +488,31 @@ class SlotEngine:
         sampled, lp = self._sample(logits, key)
         return sampled, lp, cache
 
-    def _paged_decode_fn(self, params, token, cache, bt, kv_len, key):
+    def _fused_greedy(self, params, hidden):
+        """Fused greedy LM head: the token and its logprob come straight
+        out of max / logsumexp reductions over the logits — no (B, V)
+        log-softmax materialisation, no gather, and no variadic argmax
+        reduce (the dominant cost of the two-pass path on CPU; on TPU the
+        Pallas drop-in ``kernels.ops.fused_sample`` additionally streams
+        the matmul so the (B, V) logits never round-trip through HBM).
+        First-index-at-max reproduces argmax's tie-break, so tokens are
+        bit-identical to the two-pass path."""
+        cfg = self.model.cfg
+        w = (params["embed"].T if cfg.tie_embeddings
+             else params["lm_head"]).astype(cfg.compute_dtype)
+        logits = jnp.einsum("bd,dv->bv", hidden, w).astype(jnp.float32)
+        if cfg.logit_softcap > 0:
+            logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+        v = logits.shape[1]
+        m = jnp.max(logits, axis=-1)
+        iota = jnp.arange(v)
+        idx = jnp.min(jnp.where(logits == m[:, None], iota[None, :], v),
+                      axis=-1)
+        lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[:, None]), axis=-1))
+        return idx.astype(jnp.int32), m - lse
+
+    def _paged_decode_fn(self, params, token, cache, scales, bt, kv_len,
+                         key):
         """One decode step over the page pool.
 
         Gathers a dense per-slot view through the block tables (the CPU
@@ -370,17 +521,37 @@ class SlotEngine:
         back.  Host-side COW (``prepare_step``) guarantees write pages are
         exclusively owned, so the scatter indices never collide except on
         the shared garbage page of inactive slots.
+
+        int8 pools dequantize on gather (per-page scales — the CPU
+        analogue of the scalar-prefetched scales in
+        ``kernels.ops.paged_decode_attention_int8``) and requantize the
+        written page on scatter with a monotone-nondecreasing scale, so a
+        page whose amax did not grow round-trips its old cells exactly.
         """
         P = self.page_size
         B, nb = bt.shape
+        quant = self.kv_quant == "int8"
 
-        def gather(pages):
+        def gather(pages, sc):
             g = jnp.take(pages, bt.reshape(-1), axis=1)
+            g = g.reshape(pages.shape[0], B, nb, P, *pages.shape[3:])
+            if quant:
+                s = jnp.take(sc, bt.reshape(-1), axis=1)
+                g = g.astype(jnp.float32) * s.reshape(
+                    pages.shape[0], B, nb)[..., None, None, None]
+                g = g.astype(self.model.cfg.compute_dtype)
             return g.reshape(pages.shape[0], B, nb * P, *pages.shape[3:])
 
-        view = {"k": gather(cache["k"]), "v": gather(cache["v"])}
-        logits, view = self.model.decode_step(params, token, view, kv_len)
-        sampled, lp = self._sample(logits, key)
+        view = {"k": gather(cache["k"], scales.get("k")),
+                "v": gather(cache["v"], scales.get("v"))}
+        if self.fused_sampling and self.temperature == 0:
+            hidden, view = self.model.decode_step(params, token, view,
+                                                  kv_len, return_hidden=True)
+            sampled, lp = self._fused_greedy(params, hidden)
+        else:
+            logits, view = self.model.decode_step(params, token, view,
+                                                  kv_len)
+            sampled, lp = self._sample(logits, key)
         blk = kv_len // P
 
         def take_page(x, b):                    # x: (L, S, Kh, D) one slot
@@ -389,25 +560,46 @@ class SlotEngine:
         k_new = jax.vmap(take_page, in_axes=(1, 0), out_axes=1)(view["k"], blk)
         v_new = jax.vmap(take_page, in_axes=(1, 0), out_axes=1)(view["v"], blk)
         phys = jnp.take_along_axis(bt, blk[:, None], axis=1)[:, 0]
-        cache = {
-            "k": cache["k"].at[:, phys].set(k_new.astype(cache["k"].dtype)),
-            "v": cache["v"].at[:, phys].set(v_new.astype(cache["v"].dtype)),
-        }
-        return sampled, lp, cache
+        if quant:
+            for name, new in (("k", k_new), ("v", v_new)):
+                new = new.astype(jnp.float32)
+                amax = jnp.max(jnp.abs(new), axis=(2, 3, 4))  # (L, B)
+                old = scales[name][:, phys]
+                s = jnp.maximum(old, amax / 127.0)  # monotone: old cells exact
+                q = jnp.clip(jnp.round(new / s[:, :, None, None, None]),
+                             -127, 127).astype(jnp.int8)
+                cache = dict(cache)
+                cache[name] = cache[name].at[:, phys].set(q)
+                scales = dict(scales)
+                scales[name] = scales[name].at[:, phys].set(s)
+        else:
+            cache = {
+                "k": cache["k"].at[:, phys].set(
+                    k_new.astype(cache["k"].dtype)),
+                "v": cache["v"].at[:, phys].set(
+                    v_new.astype(cache["v"].dtype)),
+            }
+        return sampled, lp, cache, scales
 
     def _paged_decode(self, params, token, cache, bt, kv_len, key):
-        fn = self._paged_decode_cache.get(bt.shape[1])
+        fused = self.fused_sampling and self.temperature == 0
+        cache_key = (bt.shape[1], self._kv_dtype_key, fused)
+        fn = self._paged_decode_cache.get(cache_key)
         if fn is None:
             fn = jax.jit(self._paged_decode_fn)
-            self._paged_decode_cache[bt.shape[1]] = fn
-        return fn(params, token, cache, bt, kv_len, key)
+            self._paged_decode_cache[cache_key] = fn
+        return fn(params, token, cache, self.kv_scales, bt, kv_len, key)
 
     def _copy_pages(self, copies: List[Tuple[int, int]]) -> None:
-        """Apply host-planned copy-on-write page copies on device."""
+        """Apply host-planned copy-on-write page copies on device (scale
+        planes travel with their pages on a quantized pool)."""
         src = np.asarray([s for s, _ in copies])
         dst = np.asarray([d for _, d in copies])
         self.cache = {name: arr.at[:, dst].set(arr[:, src])
                       for name, arr in self.cache.items()}
+        if self.kv_quant:
+            self.kv_scales = {name: arr.at[:, dst].set(arr[:, src])
+                              for name, arr in self.kv_scales.items()}
 
     def step(self) -> List[StepEvent]:
         t = self.slots
@@ -425,7 +617,7 @@ class SlotEngine:
             nb = min(next_pow2(max(1, self.kv.max_blocks(uids_act))),
                      self._pages_per_seq)
             bt = jnp.asarray(self.kv.block_table(t.uid.tolist(), nb))
-            sampled, lp, self.cache = self._paged_decode(
+            sampled, lp, self.cache, self.kv_scales = self._paged_decode(
                 params, jnp.asarray(t.next_token), self.cache, bt,
                 jnp.asarray(kv_len), sub)
             self.kv.append_tokens(uids_act, t.next_token[act].tolist())
@@ -493,11 +685,15 @@ class SlotEngine:
         ex = self.kv.export_pages(uid)
         handle = {
             "engine": "slot", "uid": uid, "active": ex.active, "kv": ex,
+            "kv_quant": self.kv_quant,
             # span copy: the donor's physical rows for ex.pages (host
             # round-trip; a multi-host deployment would DMA these)
             "pages_k": np.asarray(self.cache["k"][:, ex.pages]),
             "pages_v": np.asarray(self.cache["v"][:, ex.pages]),
         }
+        if self.kv_quant:
+            handle["scales_k"] = np.asarray(self.kv_scales["k"][:, ex.pages])
+            handle["scales_v"] = np.asarray(self.kv_scales["v"][:, ex.pages])
         if ex.active:
             sel = np.flatnonzero((self.slots.uid == uid) & self.slots.active)
             assert sel.size == 1, (uid, sel)
@@ -519,6 +715,8 @@ class SlotEngine:
         slot, or an exhausted pool."""
         if handle.get("engine") != "slot" or not self.paged:
             return False
+        if handle.get("kv_quant") != self.kv_quant:
+            return False    # int8 and fp pools do not mix page bytes
         ex = handle["kv"]
         if not self.kv.retain_across_sync and ex.version != self.kv.version:
             return False    # strict sync: pre-sync KV must not cross pools
@@ -533,6 +731,12 @@ class SlotEngine:
             cache[name] = cache[name].at[:, pages].set(
                 jnp.asarray(rows, cache[name].dtype))
         self.cache = cache
+        if self.kv_quant:
+            sc = dict(self.kv_scales)
+            for name, rows in (("k", handle["scales_k"]),
+                               ("v", handle["scales_v"])):
+                sc[name] = sc[name].at[:, pages].set(jnp.asarray(rows))
+            self.kv_scales = sc
         if ex.active:
             s = handle["slot"]
             slot = self.slots.allocate(1)

@@ -1072,8 +1072,15 @@ class EngineGroup:
                         "shared_prefills", "resumed_without_prefill",
                         "cow_copies", "evictions", "stale_kv_reuses",
                         "migrated_pages", "pages_in_use", "pages_total",
-                        "resident_seqs"):
+                        "resident_seqs", "prefill_launches",
+                        "resume_attempts", "pool_capacity_tokens"):
                 out[key] = float(sum(s.get(key, 0) for s in subs))
+            # fleet-level hit rate, recomputed from the summed counters
+            # (averaging per-replica rates would weight idle replicas
+            # equally with loaded ones)
+            out["resident_resume_rate"] = (
+                out["resumed_without_prefill"]
+                / max(out["resume_attempts"], 1.0))
             # saturation gauge: the WORST per-replica occupancy.  Pooling
             # (sum in_use / sum total) would read ~0.4 while one skewed
             # replica sits at 1.0 evicting resident KV.

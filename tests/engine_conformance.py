@@ -133,8 +133,30 @@ def make_group_mig(capacity=CAPACITY, max_gen=MAX_GEN, eos_id=-1,
                         for _ in range(n_replicas)], migrate_kv=True)
 
 
+def make_slot_packed(capacity=CAPACITY, max_gen=MAX_GEN, eos_id=-1, **kw):
+    """Packed ragged prefill: one segment-masked launch per fill wave."""
+    return make_slot(capacity=capacity, max_gen=max_gen, eos_id=eos_id,
+                     packed_prefill=True, **kw)
+
+
+def make_slot_fused(capacity=CAPACITY, max_gen=MAX_GEN, eos_id=-1, **kw):
+    """Fused greedy sampling (streaming LM head, no (B, V) round-trip).
+    The flag only changes the decode compile at temperature 0; the
+    contract must hold for sampled decode too."""
+    return make_slot(capacity=capacity, max_gen=max_gen, eos_id=eos_id,
+                     fused_sampling=True, **kw)
+
+
+def make_slot_int8(capacity=CAPACITY, max_gen=MAX_GEN, eos_id=-1, **kw):
+    """int8 KV pages with per-page scale planes."""
+    return make_slot(capacity=capacity, max_gen=max_gen, eos_id=eos_id,
+                     kv_quant="int8", **kw)
+
+
 ENGINES = [("sim", make_sim), ("slot", make_slot),
            ("slot_dense", make_slot_dense), ("slot_left", make_slot_left),
+           ("slot_packed", make_slot_packed), ("slot_fused", make_slot_fused),
+           ("slot_int8", make_slot_int8),
            ("group_sim", make_group_sim), ("group_slot", make_group_slot),
            ("group_mig", make_group_mig)]
 
@@ -357,9 +379,32 @@ def test_prefill_cache_bounded_by_bucketing():
     assert len(eng._prefill_cache) <= n_width_buckets * n_batch_buckets
     # far fewer compiles than distinct submitted shapes
     assert len(eng._prefill_cache) < len(shapes)
-    for width, kb in eng._prefill_cache:
+    for width, kb, dtype_key in eng._prefill_cache:
         assert width == 1 << (width - 1).bit_length() or width == MAX_TOTAL
         assert kb == 1 << (kb - 1).bit_length() or kb == CAPACITY
+        assert dtype_key == eng._kv_dtype_key
+
+
+def test_prefill_and_decode_caches_keyed_by_kv_dtype():
+    """Regression: an int8 engine and an fp engine with the same (width,
+    batch) bucket must NOT share compiled prefill/decode entries — the KV
+    dtype is part of every compile-cache key, so a shared cache dict (or
+    a future engine pooling compiles across replicas) cannot alias an
+    int8 page layout onto an fp one."""
+    fp = make_slot(capacity=CAPACITY)
+    q = make_slot(capacity=CAPACITY, kv_quant="int8")
+    assert fp._kv_dtype_key != q._kv_dtype_key
+    for uid, eng in ((0, fp), (100, q)):
+        eng.submit([BufferEntry(uid=uid, prompt=[1, 2, 3])], version=0)
+        eng.step()
+    assert not set(fp._prefill_cache) & set(q._prefill_cache)
+    assert not set(fp._paged_decode_cache) & set(q._paged_decode_cache)
+    # fused-vs-unfused decode variants are distinct compiles too
+    fz = make_slot(capacity=CAPACITY, fused_sampling=True)
+    fz.temperature = 0.0
+    fz.submit([BufferEntry(uid=7, prompt=[1, 2, 3])], version=0)
+    fz.step()
+    assert not set(fp._paged_decode_cache) & set(fz._paged_decode_cache)
 
 
 def test_left_padding_bucketing_keeps_gen_headroom():
@@ -449,6 +494,143 @@ def test_paged_cow_keeps_group_members_isolated():
 
     paged, dense = run(greedy_paged), run(greedy_dense)
     assert paged == dense, (paged, dense)
+
+
+def _greedy_stream(factory, prompts, max_gen=MAX_GEN):
+    eng = factory(capacity=8, max_gen=max_gen)
+    eng.temperature = 0.0
+    es = [BufferEntry(uid=i, prompt=list(p)) for i, p in enumerate(prompts)]
+    eng.submit(es, version=0)
+    toks = {e.uid: [] for e in es}
+    while eng.active_uids():
+        for ev in checked_step(eng):
+            toks[ev.uid].append(ev.token)
+    return eng, toks
+
+
+_RAGGED_PROMPTS = [[1, 2, 3, 4, 5, 6, 7, 8, 9, 2], [3, 1, 4], [1, 5, 9, 2, 6],
+                   [2, 7, 1, 8, 2, 8, 1], [1, 2]]
+
+
+def test_packed_prefill_greedy_token_identity():
+    """Packed ragged prefill must produce byte-for-byte the same greedy
+    token streams as the bucketed dense-prefill path: segment masking +
+    per-segment positions make each packed prefix's KV identical to a
+    solo prefill."""
+    _, base = _greedy_stream(make_slot, _RAGGED_PROMPTS)
+    eng, packed = _greedy_stream(make_slot_packed, _RAGGED_PROMPTS)
+    assert packed == base, (packed, base)
+    assert eng.prefill_launches == 1        # one launch for the whole wave
+
+
+def test_packed_prefill_one_launch_per_fill_wave():
+    """N waves of ragged submits = exactly N packed launches, versus the
+    bucketed path which launches once per wave too but at kb x width
+    padded cost; the counter is the roofline metric smoke rows pin."""
+    eng = make_slot_packed()
+    eng.temperature = 0.0
+    for wave, plens in enumerate([(9, 3, 5), (7, 2)]):
+        eng.submit([BufferEntry(uid=10 * wave + i, prompt=[1] * n + [2 + i])
+                    for i, n in enumerate(plens)], version=0)
+        assert eng.prefill_launches == wave + 1
+        eng.interrupt()
+    assert eng.cache_stats()["prefill_launches"] == 2.0
+
+
+def test_fused_sampling_greedy_token_identity():
+    """Fused (streaming) greedy sampling must match the two-pass
+    argmax-over-full-logits path exactly, including first-occurrence
+    tie-breaks, and must report the same logprobs."""
+    eng_b = make_slot(capacity=8)
+    eng_f = make_slot_fused(capacity=8)
+    for eng in (eng_b, eng_f):
+        eng.temperature = 0.0
+    out = {}
+    for name, eng in (("base", eng_b), ("fused", eng_f)):
+        es = [BufferEntry(uid=i, prompt=list(p))
+              for i, p in enumerate(_RAGGED_PROMPTS)]
+        eng.submit(es, version=0)
+        toks = {e.uid: [] for e in es}
+        lps = {e.uid: [] for e in es}
+        while eng.active_uids():
+            for ev in checked_step(eng):
+                toks[ev.uid].append(ev.token)
+                lps[ev.uid].append(ev.logprob)
+        out[name] = (toks, lps)
+    assert out["base"][0] == out["fused"][0], out
+    for uid, ref in out["base"][1].items():
+        for a, b in zip(ref, out["fused"][1][uid]):
+            assert abs(a - b) < 1e-4, (uid, a, b)
+
+
+def test_int8_kv_decode_stays_close_to_fp():
+    """int8 pages are lossy but bounded: the quantized engine completes
+    every rollout and its early greedy tokens (decoding off freshly
+    quantized prefill pages) match fp — gross quantization bugs flip the
+    very first token."""
+    _, base = _greedy_stream(make_slot, _RAGGED_PROMPTS, max_gen=4)
+    eng, quant = _greedy_stream(make_slot_int8, _RAGGED_PROMPTS, max_gen=4)
+    assert set(quant) == set(base)
+    first_match = sum(quant[u][0] == base[u][0] for u in base)
+    assert first_match == len(base), (quant, base)
+    assert eng.kv_quant == "int8"
+    _drained_pool_is_clean(eng)
+
+
+def test_int8_scale_planes_follow_cow_and_migration():
+    """Per-page scale planes must travel with their pages: COW copies the
+    scale row to the new page, and export->import lands the scales on the
+    destination pool so a migrated entry keeps decoding identically."""
+    import numpy as np
+    src = make_slot_int8(capacity=2)
+    src.temperature = 0.0
+    # shared prompt => shared pages => COW on divergence
+    src.submit(group_entries(2, prompt_len=10), version=0)
+    for _ in range(3):
+        checked_step(src)
+    assert src.cache_stats()["cow_copies"] >= 1
+    uid = src.active_uids()[0]
+    handle = src.export_entry(uid)
+    assert handle["kv_quant"] == "int8"
+    ex = handle["kv"]
+    np.testing.assert_array_equal(
+        handle["scales_k"], np.asarray(src.kv_scales["k"][:, ex.pages]))
+    dst = make_slot_int8(capacity=2)
+    assert dst.import_entry(handle)
+    pages = list(dst.kv.tables[uid])
+    np.testing.assert_array_equal(
+        np.asarray(dst.kv_scales["k"][:, pages]), handle["scales_k"])
+    np.testing.assert_array_equal(
+        np.asarray(dst.cache["k"][:, pages]), handle["pages_k"])
+    # fp pool refuses int8 bytes (and vice versa)
+    assert not make_slot(capacity=2).import_entry(handle)
+    src.discard_entry(uid)
+    run_to_completion(dst)
+    run_to_completion(src)
+    _drained_pool_is_clean(dst)
+
+
+def test_resident_resume_rate_counts_attempts():
+    """resume_attempts counts every try_resume of a previously
+    interrupted uid — hits AND misses — so resident_resume_rate is a real
+    hit rate, not resumed/resumed."""
+    eng = make_slot()
+    es = entries(2)
+    eng.submit(es, version=0)
+    checked_step(eng)
+    eng.interrupt()
+    # uid 0 resumes resident; uid 1's pages get evicted first => miss
+    # (evict via the memory-pressure path, which keeps the interrupted
+    # mark — an explicit release_seq is a deliberate drop, not a miss)
+    del eng.kv._resident[es[1].uid]
+    eng.kv._drop(es[1].uid)
+    eng.submit([BufferEntry(uid=e.uid, prompt=list(e.prompt),
+                            generated=[2]) for e in es], version=0)
+    st = eng.cache_stats()
+    assert st["resume_attempts"] == 2.0
+    assert st["resumed_without_prefill"] == 1.0
+    assert st["resident_resume_rate"] == pytest.approx(0.5)
+    assert st["pool_capacity_tokens"] == (eng.num_pages - 1) * eng.page_size
 
 
 @pytest.mark.parametrize("mode", [Mode.ON_POLICY, Mode.PARTIAL])

@@ -71,6 +71,15 @@ def make_group_slot_varied():
     return make_group_slot(eos_id=logic.VOCAB.eos_id)
 
 
+def make_slot_roofline():
+    """All three roofline knobs at once — packed segment-masked prefill,
+    fused greedy sampling (latent under sampled decode), and int8 KV
+    pages — must satisfy every scheduling-policy contract unchanged."""
+    from repro.data import logic
+    return make_slot(eos_id=logic.VOCAB.eos_id, packed_prefill=True,
+                     fused_sampling=True, kv_quant="int8")
+
+
 def make_group_sim_tail(n_replicas, **group_kw):
     """Replica sweep with the PR-5 tail machinery on: async stepping,
     drain-phase packing, migration, and simulated KV residency.  Every
@@ -89,6 +98,7 @@ def make_group_sim_tail(n_replicas, **group_kw):
 
 
 ENGINE_FACTORIES = {"sim": make_sim_varied, "slot": make_slot_varied,
+                    "slot_roofline": make_slot_roofline,
                     # num_replicas sweep {1, 2, 4} (total capacity fixed)
                     "group1_sim": make_group_sim_varied(1),
                     "group2_sim": make_group_sim_varied(2),

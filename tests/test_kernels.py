@@ -5,11 +5,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.ops import (flash_attention, paged_decode_attention,
+from repro.kernels.ops import (flash_attention, fused_sample,
+                               paged_decode_attention,
+                               paged_decode_attention_int8,
                                ragged_decode_attention)
-from repro.kernels.ref import (flash_attention_ref, gather_pages,
+from repro.kernels.ref import (KV_INT8_DECODE_ATOL, flash_attention_ref,
+                               fused_sample_ref, gather_pages,
+                               paged_decode_attention_int8_ref,
                                paged_decode_attention_ref,
-                               ragged_decode_attention_ref)
+                               quantize_pages_ref, ragged_decode_attention_ref)
 
 pytestmark = pytest.mark.slow   # jit-heavy: Pallas interpret-mode sweeps
 
@@ -159,3 +163,164 @@ def test_blockwise_matches_full_attention():
     out = blockwise_attention(q, k, v, causal=True)
     ref = full_attention(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+# -- packed (segment-masked) prefill ------------------------------------------
+
+def _packed_segments(key, B, S, P, n_segs):
+    """Random ragged packing: up to n_segs page-aligned segments per row,
+    -1 padded tail."""
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 1 << 30)))
+    seg = np.full((B, S), -1, np.int32)
+    for b in range(B):
+        off = 0
+        for s in range(rng.integers(1, n_segs + 1)):
+            span = int(rng.integers(1, max(2, (S - off) // P + 1))) * P
+            if off + span > S:
+                break
+            seg[b, off:off + span] = s
+            off += span
+    return jnp.asarray(seg)
+
+
+@pytest.mark.parametrize("B,S,P,w", [
+    (2, 256, 64, 0),
+    (1, 512, 128, 0),
+    (2, 256, 64, 128),          # packed + sliding window
+    (3, 384, 128, 0),           # non-pow2 grid
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_packed_segments(B, S, P, w, dtype):
+    """Segment-masked flash kernel == oracle on ragged packed layouts:
+    tokens never attend across segment boundaries, pad (-1) columns
+    contribute nothing to real rows."""
+    ks = jax.random.split(KEY, 4)
+    H, Kh, D = 4, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Kh, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Kh, D), dtype)
+    seg = _packed_segments(ks[3], B, S, P, 4)
+    bq = 128 if S % 128 == 0 else 64
+    out = flash_attention(q, k, v, seg_ids=seg, block_q=bq, block_k=bq,
+                          window=w)
+    ref = flash_attention_ref(q, k, v, causal=True, window=w, seg_ids=seg)
+    tol = 3e-6 if dtype == jnp.float32 else 3e-2
+    real = np.asarray(seg) >= 0
+    np.testing.assert_allclose(np.asarray(out, np.float32)[real],
+                               np.asarray(ref, np.float32)[real], atol=tol,
+                               rtol=tol)
+
+
+def test_flash_attention_packed_equals_solo_prefill():
+    """Each segment of a packed row attends exactly as the same tokens
+    would alone in their own (left-aligned) row — the property the packed
+    prefill engine path relies on for token identity."""
+    ks = jax.random.split(KEY, 3)
+    S, H, Kh, D = 256, 4, 2, 64
+    lens = [128, 64, 64]
+    q = jax.random.normal(ks[0], (1, S, H, D))
+    k = jax.random.normal(ks[1], (1, S, Kh, D))
+    v = jax.random.normal(ks[2], (1, S, Kh, D))
+    seg = jnp.asarray(np.repeat(np.arange(3), lens)[None, :], jnp.int32)
+    packed = flash_attention(q, k, v, seg_ids=seg, block_q=64, block_k=64)
+    off = 0
+    for n in lens:
+        solo = flash_attention_ref(q[:, off:off + n], k[:, off:off + n],
+                                   v[:, off:off + n], causal=True)
+        np.testing.assert_allclose(np.asarray(packed[:, off:off + n]),
+                                   np.asarray(solo), atol=3e-6, rtol=3e-6)
+        off += n
+
+
+# -- fused sampling (streaming LM head) ---------------------------------------
+
+@pytest.mark.parametrize("B,Dm,V,bv,topk", [
+    (4, 64, 1000, 128, 1),      # ragged vocab tail
+    (2, 128, 4096, 512, 1),
+    (1, 64, 2048, 256, 8),      # top-k merge across blocks
+    (3, 32, 515, 128, 4),       # vocab % block != 0 with k > 1
+])
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+def test_fused_sample_matches_two_pass(B, Dm, V, bv, topk, softcap):
+    """Fused matmul+top-k+logsumexp == materialise-the-logits oracle,
+    including index order on ties (lowest index first)."""
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (B, Dm))
+    w = jax.random.normal(ks[1], (Dm, V)) / np.sqrt(Dm)
+    vals, idx, lse = fused_sample(x, w, top_k=topk, block_v=bv,
+                                  softcap=softcap)
+    rv, ri, rl = fused_sample_ref(x, w, top_k=topk, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rv), atol=1e-5,
+                               rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(rl), atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_fused_sample_greedy_identity_on_ties():
+    """Exact duplicate maxima across different vocab blocks: the fused
+    kernel must return the FIRST occurrence, matching jnp.argmax."""
+    Dm, V, bv = 16, 512, 128
+    x = jnp.ones((1, Dm))
+    w = np.zeros((Dm, V), np.float32)
+    w[:, 37] = 1.0          # block 0
+    w[:, 300] = 1.0         # identical logit in block 2
+    _, idx, _ = fused_sample(x, jnp.asarray(w), top_k=1, block_v=bv)
+    logits = jnp.einsum("bd,dv->bv", x, jnp.asarray(w))
+    assert int(idx[0, 0]) == int(jnp.argmax(logits[0])) == 37
+
+
+# -- int8 KV pages ------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,Kh,D,P,N,nb", [
+    (4, 8, 2, 64, 128, 9, 2),
+    (2, 16, 16, 128, 128, 17, 3),
+    (1, 4, 1, 256, 256, 5, 2),
+])
+def test_paged_decode_int8_matches_dequant_oracle(B, H, Kh, D, P, N, nb):
+    """In-kernel dequant (scalar-prefetched per-page scales) == dequantize
+    the whole pool then run the fp oracle."""
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kp8, ksc = quantize_pages_ref(jax.random.normal(ks[1], (N, P, Kh, D)))
+    vp8, vsc = quantize_pages_ref(jax.random.normal(ks[2], (N, P, Kh, D)))
+    bt = jax.random.randint(ks[3], (B, nb), 0, N)
+    kv_len = jax.random.randint(ks[4], (B,), 1, nb * P + 1)
+    out = paged_decode_attention_int8(q, kp8, vp8, ksc, vsc, bt, kv_len)
+    ref = paged_decode_attention_int8_ref(q, kp8, vp8, ksc, vsc, bt, kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-6,
+                               rtol=2e-6)
+
+
+def test_paged_decode_int8_error_within_documented_atol():
+    """Quantize fp pages -> int8 decode output stays within the
+    documented KV_INT8_DECODE_ATOL of the fp decode on the SAME pages.
+    This is the tolerance README promises users of kv_quant="int8"."""
+    ks = jax.random.split(KEY, 5)
+    B, H, Kh, D, P, N, nb = 4, 8, 2, 64, 128, 9, 2
+    q = jax.random.normal(ks[0], (B, H, D))
+    kp = jax.random.normal(ks[1], (N, P, Kh, D))
+    vp = jax.random.normal(ks[2], (N, P, Kh, D))
+    bt = jax.random.randint(ks[3], (B, nb), 0, N)
+    kv_len = jax.random.randint(ks[4], (B,), 1, nb * P + 1)
+    kp8, ksc = quantize_pages_ref(kp)
+    vp8, vsc = quantize_pages_ref(vp)
+    out = paged_decode_attention_int8(q, kp8, vp8, ksc, vsc, bt, kv_len)
+    fp = paged_decode_attention_ref(q, kp, vp, bt, kv_len)
+    err = float(jnp.max(jnp.abs(out - fp)))
+    assert err < KV_INT8_DECODE_ATOL, err
+
+
+def test_int8_quantize_roundtrip_properties():
+    """Per-page symmetric quantization invariants: all-zero pages are
+    exact, scales are per-page (not global), and requantizing with an
+    unchanged scale is idempotent on already-quantized cells."""
+    ks = jax.random.split(KEY, 1)[0]
+    pages = jax.random.normal(ks, (6, 32, 2, 16))
+    pages = pages.at[0].set(0.0)
+    q8, sc = quantize_pages_ref(pages)
+    assert float(jnp.abs(q8[0].astype(jnp.float32)).max()) == 0.0
+    assert sc.shape == (6,)
+    deq = q8.astype(jnp.float32) * sc[:, None, None, None]
+    q8b, _ = quantize_pages_ref(deq)
+    np.testing.assert_array_equal(np.asarray(q8b), np.asarray(q8))

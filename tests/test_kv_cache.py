@@ -462,6 +462,123 @@ def test_migration_random_interleavings_hold_invariants(pages_a, pages_b,
         assert not p._donors and not p._donor_keys, "donor index leaked"
 
 
+@cases(max_examples=40,
+       pages_a=integers(4, 14),
+       pages_b=integers(4, 14),
+       page_size=integers(1, 4),
+       ops=lists(tuples(integers(0, 5), integers(0, 5), integers(0, 9)),
+                 min_size=1, max_size=60))
+def test_quantized_scale_planes_follow_pages(pages_a, pages_b, page_size,
+                                             ops):
+    """The int8 engine keeps a per-(layer, page) scale plane next to the
+    page pool and applies three rules: COW copies the scale row with the
+    page, decode writeback restamps the written page's scale, and
+    export->import migrates scale rows alongside the physical pages.
+    This drives random share/COW/interrupt/migrate interleavings with a
+    host model of that plane (one stamp per page) and asserts every
+    sequence always reads the stamps its prefix was written with — a
+    missed COW copy or a migration that dropped scales shows up as a
+    stale stamp under some reader's table."""
+    pools = [PagedKVCache(pages_a, page_size),
+             PagedKVCache(pages_b, page_size)]
+    planes = [{}, {}]       # page -> stamp, per pool
+    expected = {}           # uid -> (side, {position: stamp})
+    fresh = iter(range(10**6))
+
+    def check():
+        for uid, (side, stamps) in expected.items():
+            for pos, page in enumerate(pools[side].tables[uid]):
+                if pos in stamps:
+                    assert planes[side][page] == stamps[pos], \
+                        (uid, pos, page)
+
+    def prune():
+        for uid in [u for u, (side, _) in expected.items()
+                    if u not in pools[side].tables]:
+            del expected[uid]       # evicted / dropped / resumed-trimmed
+
+    for opcode, uid, arg in ops:
+        side = arg % 2
+        kv, plane = pools[side], planes[side]
+        if opcode == 0 and all(uid not in p.tables for p in pools):
+            key = tuple(uid * 101 + j for j in range(1 + arg))
+            try:
+                table = kv.register_prefill(uid, key)
+            except PoolExhausted:
+                continue
+            stamps = {j: next(fresh) for j in range(len(table))}
+            for j, page in enumerate(table):    # engine: _scatter_pages
+                plane[page] = stamps[j]
+            expected[uid] = (side, stamps)
+        elif opcode == 1 and all(uid not in p.tables for p in pools):
+            keys = sorted(kv._donors)
+            if not keys:
+                continue
+            key = keys[arg % len(keys)]
+            donor = kv.find_donor(key)
+            if donor is not None and donor in expected:
+                kv.share(uid, donor, key)       # no page writes, no stamps
+                n = len(kv.tables[uid])
+                dstamps = expected[donor][1]
+                expected[uid] = (side, {j: dstamps[j] for j in range(n)
+                                        if j in dstamps})
+        elif opcode == 2:                       # decode step: COW + write
+            active = sorted(kv._active)
+            if not active:
+                continue
+            u = active[arg % len(active)]
+            kv_len = len(kv.tokens[u])
+            try:
+                copies = kv.prepare_step([u], [kv_len])
+            except PoolExhausted:
+                continue
+            for src, dst in copies:             # engine: _copy_pages
+                plane[dst] = plane[src]
+            j = kv_len // page_size             # engine: requant writeback
+            if u in expected:
+                # the decode gather dequantizes THIS step through the
+                # post-COW table — every committed position (including a
+                # just-copied write page) must carry its expected stamp
+                for pos, page in enumerate(kv.tables[u]):
+                    if pos in expected[u][1]:
+                        assert plane.get(page) == expected[u][1][pos], \
+                            (u, pos, page)
+                stamp = next(fresh)
+                plane[kv.tables[u][j]] = stamp
+                expected[u][1][j] = stamp
+            kv.append_tokens([u], [arg])
+        elif opcode == 3:                       # interrupt
+            active = sorted(kv._active)
+            if active:
+                kv.deactivate(active[arg % len(active)])
+        elif opcode == 4:                       # migrate -> other pool
+            movable = sorted(kv.tables)
+            if not movable:
+                continue
+            u = movable[arg % len(movable)]
+            ex = kv.export_pages(u)
+            moved = [plane.get(p) for p in ex.pages]
+            try:
+                new_pages = pools[1 - side].import_pages(ex)
+            except PoolExhausted:
+                continue                        # donor copy intact
+            for p, stamp in zip(new_pages, moved):
+                if stamp is not None:           # engine: scales_k/v scatter
+                    planes[1 - side][p] = stamp
+            if u in expected:
+                expected[u] = (1 - side, expected[u][1])
+            kv.release_seq(u)
+        elif opcode == 5 and uid in kv.tables:  # finish
+            kv.release_seq(uid)
+        prune()
+        check()
+        for p in pools:
+            p.check_invariants()
+    for p in pools:
+        p.release_many(list(p.tables))
+        assert p.pool.pages_in_use == 0
+
+
 @cases(max_examples=20,
        num_pages=integers(3, 6),
        plen=integers(6, 30))
